@@ -1,0 +1,90 @@
+"""Shared benchmark utilities: timing, pretrain→adapt harness."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, peft_targets
+from repro.core.peft import adapters_param_count, init_adapters
+from repro.core.transforms import PEFTConfig
+from repro.data.pipeline import SyntheticLMStream
+from repro.models import init_model, train_loss
+from repro.optim import adamw, apply_updates, constant
+
+_PRETRAINED: dict = {}
+
+
+def time_us(fn, *args, iters: int = 10, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def pretrained_base(arch: str = "smollm-360m", steps: int = 100):
+    """Briefly pretrained smoke model (paper adapts pretrained models)."""
+    if arch in _PRETRAINED:
+        return _PRETRAINED[arch]
+    cfg = get_config(arch, "smoke")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    opt = adamw(constant(2e-3))
+    state = opt.init(params)
+    stream = SyntheticLMStream(vocab=cfg.vocab, batch=8, seq_len=32, seed=0)
+
+    @jax.jit
+    def step(p, s, b):
+        (l, _), g = jax.value_and_grad(
+            lambda p: train_loss(p, None, b, cfg, None), has_aux=True)(p)
+        u, s = opt.update(g, s, p)
+        return apply_updates(p, u), s, l
+
+    for i in range(steps):
+        params, state, _ = step(params, state, stream.batch_at(i))
+    _PRETRAINED[arch] = (cfg, params)
+    return cfg, params
+
+
+def adapt(method: str, lr: float, *, steps: int = 60, n_blocks: int = 4,
+          rank: int = 4, arch: str = "smollm-360m", task_seed: int = 777,
+          peft_mode: str = "activation", two_sided: bool = True,
+          return_adapters: bool = False):
+    """Pretrain→adapt run; returns dict(first, last, params, method, lr)."""
+    cfg, params = pretrained_base(arch)
+    peft = PEFTConfig(method=method, n_blocks=n_blocks, rank=rank,
+                      alpha=float(rank), mode=peft_mode,
+                      two_sided=two_sided, targets=peft_targets(arch))
+    adapters = init_adapters(jax.random.PRNGKey(2), params, peft)
+    opt = adamw(constant(lr))
+    state = opt.init(adapters)
+    stream = SyntheticLMStream(vocab=cfg.vocab, batch=8, seq_len=32,
+                               seed=task_seed)
+
+    @jax.jit
+    def step(a, s, b):
+        (l, _), g = jax.value_and_grad(
+            lambda a: train_loss(params, a, b, cfg, peft),
+            has_aux=True)(a)
+        u, s = opt.update(g, s, a)
+        return apply_updates(a, u), s, l
+
+    first = float(train_loss(params, adapters, stream.batch_at(0), cfg,
+                             peft)[0])
+    last = float("nan")
+    for i in range(steps):
+        adapters, state, loss = step(adapters, state, stream.batch_at(i))
+        last = float(loss)
+    out = dict(method=method, lr=lr, first=first, last=last,
+               params=adapters_param_count(params, peft),
+               n_blocks=n_blocks)
+    if return_adapters:
+        out["adapters"] = adapters
+        out["base"] = params
+        out["cfg"] = cfg
+        out["peft"] = peft
+    return out

@@ -1,0 +1,26 @@
+"""Paper App. D.1: performance vs number of diagonal blocks n — ETHER's
+param count is n-invariant and quality is nearly flat while the paper's
+block-GEMM FLOPs drop as O(1/n)."""
+
+from __future__ import annotations
+
+from benchmarks._common import adapt
+from benchmarks.table1_flops import MODELS, adapter_flops
+
+
+def run():
+    rows = []
+    for n in (1, 2, 4):                 # smoke d_model=96 ⇒ small n
+        r = adapt("ether", 2e-2, steps=50, n_blocks=n)
+        flops = adapter_flops("ether", MODELS["Llama-2-7B"], n=n,
+                              mode="blockgemm") / 1e12
+        rows.append(dict(
+            name=f"ablation_d1/ether_n{n}", us_per_call=0.0,
+            derived=f"final_loss={r['last']:.3f} params={r['params']} "
+                    f"llama7b_blockgemm_overhead={flops:.1f}TF"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r["name"], r["derived"])

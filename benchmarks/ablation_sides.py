@@ -1,0 +1,23 @@
+"""Paper App. D.2: one-sided vs two-sided ETHER+ — double application
+doubles params and improves adaptation."""
+
+from __future__ import annotations
+
+from benchmarks._common import adapt
+
+
+def run():
+    rows = []
+    for two_sided in (False, True):
+        r = adapt("etherplus", 2e-2, steps=50, n_blocks=4,
+                  two_sided=two_sided)
+        label = "two_sided" if two_sided else "one_sided"
+        rows.append(dict(
+            name=f"ablation_d2/etherplus_{label}", us_per_call=0.0,
+            derived=f"final_loss={r['last']:.3f} params={r['params']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r["name"], r["derived"])

@@ -1,0 +1,40 @@
+"""Paper Figs. 5/6: adaptation quality vs learning rate across methods —
+ETHER-family retains performance across LR magnitudes; multiplicative
+baselines degrade or diverge at high LR."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks._common import adapt
+
+LRS = (1e-3, 1e-2, 1e-1, 1.0)
+
+
+def run():
+    rows = []
+    for method, kw in [("ether", dict(n_blocks=4)),
+                       ("etherplus", dict(n_blocks=4)),
+                       ("oft", dict(n_blocks=4)),
+                       ("naive", dict(n_blocks=4)),
+                       ("lora", dict(rank=4))]:
+        finals = []
+        for lr in LRS:
+            r = adapt(method, lr, steps=40, **kw)
+            finals.append(r["last"])
+            rows.append(dict(
+                name=f"fig56/{method}/lr{lr:g}", us_per_call=0.0,
+                derived=f"final_loss={r['last']:.3f} "
+                        f"(first={r['first']:.3f})"))
+        finite = [f for f in finals if np.isfinite(f)]
+        spread = (max(finite) - min(finite)) if finite else float("inf")
+        rows.append(dict(
+            name=f"fig56/{method}/spread", us_per_call=0.0,
+            derived=f"loss_spread_across_lrs={spread:.3f} "
+                    f"n_finite={len(finite)}/{len(LRS)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r["name"], r["derived"])

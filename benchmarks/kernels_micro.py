@@ -1,0 +1,40 @@
+"""Microbenchmarks of the Pallas kernels (interpret-mode CPU timings —
+relative numbers only; the kernels target TPU)."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks._common import time_us
+from repro.kernels import ops, ref
+
+
+def run():
+    rows = []
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (512, 1024))
+    u = jax.random.normal(jax.random.fold_in(k, 1), (32, 32))
+    w = jax.random.normal(jax.random.fold_in(k, 2), (1024, 1024))
+
+    pairs = [
+        ("ether_reflect", lambda: ops.ether_reflect(x, u),
+         lambda: ref.ref_ether_reflect(x, u)),
+        ("householder_gemm", lambda: ops.householder_gemm(x, w, u),
+         lambda: ref.ref_householder_gemm(x, w, u)),
+        ("ether_merge", lambda: ops.ether_merge(w, u),
+         lambda: ref.ref_ether_merge(w, u)),
+    ]
+    for name, kfn, rfn in pairs:
+        kf = jax.jit(kfn)
+        rf = jax.jit(rfn)
+        rows.append(dict(name=f"kernels/{name}/pallas_interp",
+                         us_per_call=time_us(kf),
+                         derived="interpret-mode (CPU emulation)"))
+        rows.append(dict(name=f"kernels/{name}/xla_ref",
+                         us_per_call=time_us(rf), derived="jnp oracle"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r["name"], r["us_per_call"])

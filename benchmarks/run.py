@@ -1,0 +1,50 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness — one module per paper table/figure plus the
+roofline report. ``python -m benchmarks.run [--only substr]``."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.table1_flops",        # paper Table 1
+    "benchmarks.table23_params",      # Tables 2/3 (+4/5 #params)
+    "benchmarks.table45_convergence", # Tables 4/5 proxy
+    "benchmarks.fig4_distances",      # Fig. 4
+    "benchmarks.fig56_lr_robustness", # Figs. 5/6
+    "benchmarks.table6_he_study",     # Table 6 / Fig. 7
+    "benchmarks.ablation_blocks",     # App. D.1
+    "benchmarks.ablation_sides",      # App. D.2
+    "benchmarks.kernels_micro",       # kernel timings
+    "benchmarks.roofline",            # §Roofline from dry-run JSONs
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = 0
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        try:
+            import importlib
+            mod = importlib.import_module(modname)
+            for row in mod.run():
+                d = str(row.get("derived", "")).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']:.1f},{d}",
+                      flush=True)
+        except Exception:
+            failed += 1
+            traceback.print_exc(file=sys.stderr)
+            print(f"{modname},0.0,ERROR", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,108 @@
+"""Paper Tables 2/3/4/5 '#params' columns — exact adapter counts.
+
+* Stable-Diffusion-1.5 UNet attention inventory (subject-driven: Q,K,V +
+  out proj; S2I additionally the ffn) → Table 2/3 counts
+  (ETHER 0.1M / ETHER+ 0.4M / OFT_n4 11.6M / LoRA_r4 0.8M).
+* DeBERTaV3-base all-linears (GLUE, Table 4): ETHER 0.085M≈0.09M,
+  ETHER+ 0.33M, LoRA_r8 1.33M.
+* Llama-2-7B attention(+proj) (instruction tuning, Table 5).
+
+These are closed-form counts from the published layer dims — the
+reproduction is exact where the paper's targets are unambiguous and
+within rounding elsewhere (assumptions in comments).
+"""
+
+from __future__ import annotations
+
+from repro.core.transforms import PEFTConfig, adapter_param_count
+
+# SD-1.5 UNet transformer blocks: (d_model, n_blocks_at_level) with one
+# self-attn (q,k,v,o at d×d) + one cross-attn (q at d×d; k,v at 768×d; o)
+# per block; ffn is GEGLU d→8d/2... (diffusers: GEGLU d→4d·2, proj 4d→d).
+SD15_BLOCKS = [(320, 2), (640, 2), (1280, 2), (1280, 1),   # down + mid
+               (320, 3), (640, 3), (1280, 3)]              # up
+TEXT_D = 768
+
+
+def sd_linears(include_ffn: bool):
+    """S2I adds the GEGLU input projection only — this is the target set
+    that reproduces the paper's OFT 11.6M→13.2M delta exactly."""
+    mats = []
+    for d, n in SD15_BLOCKS:
+        for _ in range(n):
+            mats += [(d, d)] * 4                 # self q,k,v,o
+            mats += [(d, d), (TEXT_D, d), (TEXT_D, d), (d, d)]  # cross
+            if include_ffn:
+                mats += [(d, 8 * d)]             # GEGLU in
+    return mats
+
+
+def deberta_linears(attn_only=False):
+    d, ff, L = 768, 3072, 12
+    per = [(d, d)] * 4 + ([] if attn_only else [(d, ff), (ff, d)])
+    return per * L
+
+
+def llama_linears(with_proj=True):
+    """lit-gpt fused qkv; Table 5 counts imply per-method target sets:
+    qkv-only for LoRA/ETHER+, qkv+proj for ETHER (see derived ratios)."""
+    d, L = 4096, 32
+    per = [(d, 3 * d)] + ([(d, d)] if with_proj else [])
+    return per * L
+
+
+def count(method, mats, **kw):
+    cfg = PEFTConfig(method=method, **kw)
+    return sum(adapter_param_count(method, i, o, cfg) for i, o in mats)
+
+
+def run():
+    rows = []
+    suites = [
+        ("table2_sd_subject", sd_linears(False),
+         {"ETHER": ("ether", dict(n_blocks=4)),
+          "ETHER+": ("etherplus", dict(n_blocks=4)),
+          "OFT_n4": ("oft", dict(n_blocks=4)),
+          "LoRA_r4": ("lora", dict(rank=4))},
+         {"ETHER": 0.1e6, "ETHER+": 0.4e6, "OFT_n4": 11.6e6,
+          "LoRA_r4": 0.8e6}),
+        ("table3_sd_s2i", sd_linears(True),
+         {"ETHER": ("ether", dict(n_blocks=4)),
+          "ETHER+": ("etherplus", dict(n_blocks=4)),
+          "OFT_n4": ("oft", dict(n_blocks=4))},
+         {"ETHER": 0.1e6, "ETHER+": 0.4e6, "OFT_n4": 13.2e6}),
+        ("table4_deberta_glue", deberta_linears(),
+         {"ETHER": ("ether", dict(n_blocks=4)),
+          "ETHER+": ("etherplus", dict(n_blocks=4)),
+          "LoRA_r8": ("lora", dict(rank=8))},
+         {"ETHER": 0.09e6, "ETHER+": 0.33e6, "LoRA_r8": 1.33e6}),
+        # OFT's GLUE recipe (Liu et al. 2023a) targets attention only
+        ("table4_deberta_glue_attn", deberta_linears(attn_only=True),
+         {"OFT_n16": ("oft", dict(n_blocks=16))},
+         {"OFT_n16": 0.79e6}),
+        # Table 5 target sets differ per method (from the litgpt-based
+        # configs): ETHER adapts qkv+proj; ETHER+/LoRA adapt qkv only.
+        ("table5_llama2_it", llama_linears(with_proj=True),
+         {"ETHER_n32": ("ether", dict(n_blocks=32))},
+         {"ETHER_n32": 0.26e6}),
+        ("table5_llama2_it_qkv", llama_linears(with_proj=False),
+         {"ETHER+_n32": ("etherplus", dict(n_blocks=32)),
+          "LoRA_r8": ("lora", dict(rank=8)),
+          "LoRA_r1": ("lora", dict(rank=1))},
+         {"ETHER+_n32": 1.04e6, "LoRA_r8": 4.19e6, "LoRA_r1": 0.52e6}),
+    ]
+    for table, mats, methods, paper in suites:
+        for label, (method, kw) in methods.items():
+            got = count(method, mats, **kw)
+            expect = paper.get(label)
+            ratio = got / expect if expect else float("nan")
+            rows.append(dict(
+                name=f"{table}/{label}", us_per_call=0.0,
+                derived=f"params={got} paper={expect:.0f} "
+                        f"ratio={ratio:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r["name"], r["derived"])

@@ -1,0 +1,32 @@
+"""Paper Tables 4/5 proxy: adaptation quality per method at matched
+step budgets (no GLUE/MMLU data in this container — the measurable claim
+is relative convergence + parameter cost on the pretrain→adapt protocol;
+see DESIGN.md §8 faithfulness boundary)."""
+
+from __future__ import annotations
+
+from benchmarks._common import adapt
+
+
+def run():
+    rows = []
+    grid = [
+        ("ether", 2e-2, dict(n_blocks=4)),
+        ("etherplus", 2e-2, dict(n_blocks=4)),
+        ("lora", 2e-3, dict(rank=4)),
+        ("vera", 2e-2, dict(rank=4)),
+        ("oft", 2e-3, dict(n_blocks=4)),
+        ("naive", 2e-3, dict(n_blocks=4)),
+    ]
+    for method, lr, kw in grid:
+        r = adapt(method, lr, steps=60, **kw)
+        rows.append(dict(
+            name=f"table45/{method}", us_per_call=0.0,
+            derived=f"loss {r['first']:.3f}->{r['last']:.3f} "
+                    f"params={r['params']} lr={lr}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r["name"], r["derived"])

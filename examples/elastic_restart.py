@@ -1,0 +1,62 @@
+"""Fault-tolerance walkthrough: failure injection → auto-resume, then an
+elastic restart on a smaller mesh (simulating dead hosts).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/elastic_restart.py
+"""
+
+import os
+import tempfile
+
+import jax
+
+from repro.configs import get_config, peft_targets
+from repro.core.transforms import PEFTConfig
+from repro.data.pipeline import SyntheticLMStream
+from repro.launch.mesh import make_host_mesh
+from repro.optim import adamw, constant
+from repro.runtime.trainer import Trainer
+
+
+def main():
+    n_dev = len(jax.devices())
+    cfg = get_config("smollm-360m", "smoke")
+    peft = PEFTConfig(method="ether", n_blocks=4,
+                      targets=peft_targets("smollm-360m"))
+    stream = SyntheticLMStream(vocab=cfg.vocab, batch=8, seq_len=32,
+                               seed=0)
+    ckpt = tempfile.mkdtemp(prefix="elastic_")
+    mesh = make_host_mesh(max(n_dev // 2, 1), min(2, n_dev)) \
+        if n_dev >= 4 else None
+    print(f"devices={n_dev}; initial mesh="
+          f"{dict(mesh.shape) if mesh else 'single-device'}")
+
+    # run 1: crash at step 15 (checkpoint every 10)
+    tr = Trainer(cfg, peft, adamw(constant(1e-2)), mesh=mesh,
+                 ckpt_dir=ckpt, ckpt_every=10, fail_at_step=15)
+    try:
+        tr.fit(stream, steps=40)
+    except RuntimeError as e:
+        print(f"run 1 died as injected: {e}")
+
+    # run 2: "two hosts died" — rebuild a smaller mesh, auto-restore the
+    # logical checkpoint onto it, finish training
+    from repro.runtime.elastic import best_mesh_shape
+    if n_dev >= 4:
+        d2, m2 = best_mesh_shape(n_dev // 2, prefer_model=2)
+        mesh2 = make_host_mesh(d2, m2)
+        print(f"elastic restart on mesh {dict(mesh2.shape)} "
+              f"({n_dev}→{n_dev // 2} devices)")
+    else:
+        mesh2 = None
+    tr2 = Trainer(cfg, peft, adamw(constant(1e-2)), mesh=mesh2,
+                  ckpt_dir=ckpt, ckpt_every=10)
+    print(f"restored at step {tr2.step} "
+          f"(data cursor {tr2.data_state.step})")
+    m = tr2.fit(stream, steps=40)
+    print(f"finished @ step {tr2.step}: loss={m['loss']:.3f}")
+    print(f"straggler log: {tr2.timer.anomalies}")
+
+
+if __name__ == "__main__":
+    main()

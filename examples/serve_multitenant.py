@@ -1,0 +1,77 @@
+"""Multi-tenant ETHER serving (beyond-paper system feature).
+
+ETHER adapters are so small (O(L·d)) that a bank of thousands of
+per-client adapters fits in a few MB of HBM; requests carry an
+adapter id and the batched reflection gathers each sequence's
+hyperplanes on the fly — no weight swapping, no per-tenant batches
+(contrast with multi-LoRA serving which must fit r×(d+f) per tenant).
+
+    PYTHONPATH=src python examples/serve_multitenant.py --tenants 64
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.transforms import reflect_activation_batched
+from repro.models import init_model
+from repro.models.backbone import forward, logits_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tenants", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-360m", "smoke")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    d = cfg.d_model
+    n_blocks = 4
+
+    # per-tenant hyperplane banks for the embedding-side reflection
+    bank = jax.random.normal(jax.random.PRNGKey(1),
+                             (args.tenants, n_blocks, d // n_blocks))
+    bank_bytes = bank.size * 4
+    print(f"adapter bank: {args.tenants} tenants = {bank_bytes/1e3:.1f} KB "
+          f"({bank_bytes/args.tenants:.0f} B/tenant)")
+
+    tokens = jax.random.randint(jax.random.PRNGKey(2),
+                                (args.batch, args.seq), 0, cfg.vocab)
+    ids = jax.random.randint(jax.random.PRNGKey(3), (args.batch,), 0,
+                             args.tenants)
+
+    @jax.jit
+    def serve(params, bank, tokens, ids):
+        # embed, apply per-request tenant reflection, run the backbone
+        from repro.models import layers as L
+        x = L.embed(params["embed"], tokens, cfg.cdt())
+        x = reflect_activation_batched(x, bank, ids)
+        hidden, _, _ = forward(params, cfg, inputs_embeds=x, mode="train")
+        return logits_fn(params, cfg, hidden[:, -1:])
+
+    out = serve(params, bank, tokens, ids)
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        out = serve(params, bank, tokens, ids)
+    out.block_until_ready()
+    dt = (time.perf_counter() - t0) / 5
+    print(f"batched multi-tenant forward: {dt*1e3:.1f} ms "
+          f"({args.batch} requests, {args.batch} distinct adapters)")
+
+    # per-request correctness: each row equals its tenant's single run
+    import numpy as np
+    for b in range(min(3, args.batch)):
+        one = serve(params, bank, tokens[b:b + 1], ids[b:b + 1])
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(one[0]),
+                                   rtol=2e-4, atol=2e-4)
+    print("per-request isolation verified (rows == single-tenant runs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""End-to-end driver (deliverable b): train a ~106M-parameter llama-family
+model for a few hundred steps through the full production stack —
+Trainer (async checkpoints, auto-resume, straggler watchdog), data
+pipeline, then ETHER-adapt the pretrained base to a shifted task.
+
+    PYTHONPATH=src python examples/train_100m.py \
+        --pretrain-steps 200 --adapt-steps 100 --out /tmp/run100m
+
+CPU note: ~106M params × 1k tokens/step ≈ 4e11 FLOPs/step — expect tens
+of seconds per step on one core; use --quick for a 2-minute sanity pass.
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+
+from repro.configs._common import SMOKE
+from repro.core.transforms import PEFTConfig
+from repro.data.pipeline import SyntheticLMStream
+from repro.models import ModelConfig
+from repro.optim import adamw, cosine, constant
+from repro.runtime.trainer import Trainer
+
+
+def model_100m(quick=False):
+    if quick:
+        return ModelConfig(name="quick-12m", n_layers=4, d_model=256,
+                           n_heads=4, n_kv=2, d_ff=768, vocab=8192,
+                           **SMOKE)
+    # ~101M params; vocab sized so the synthetic next-token structure is
+    # learnable within a few hundred CPU steps (32k vocab needs far more
+    # token-identity exposure than a 300-step run provides — measured).
+    return ModelConfig(name="lm-101m", n_layers=14, d_model=768,
+                       n_heads=12, n_kv=6, d_ff=2304, vocab=8192,
+                       **SMOKE)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pretrain-steps", type=int, default=200)
+    ap.add_argument("--adapt-steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--adapt-lr", type=float, default=2e-2)
+    ap.add_argument("--out", default="/tmp/run100m")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    cfg = model_100m(args.quick)
+    os.makedirs(args.out, exist_ok=True)
+    from repro.common.pytree import tree_count
+    import jax
+    from repro.models import init_model
+    n = tree_count(jax.eval_shape(
+        lambda: init_model(jax.random.PRNGKey(0), cfg)))
+    print(f"model {cfg.name}: {n/1e6:.1f}M params", flush=True)
+
+    # ---- phase 1: pretrain (full finetuning path) ----
+    stream = SyntheticLMStream(vocab=cfg.vocab, batch=args.batch,
+                               seq_len=args.seq_len, seed=0)
+    tr = Trainer(cfg, None, adamw(cosine(args.lr, args.pretrain_steps,
+                                         warmup=30)),
+                 full_finetune=True, ckpt_dir=os.path.join(args.out, "pre"),
+                 ckpt_every=20, log_path=os.path.join(args.out,
+                                                      "pretrain.jsonl"))
+    m = tr.fit(stream, steps=args.pretrain_steps)
+    print(f"pretrain done @ step {tr.step}: {m}", flush=True)
+    base_params = tr.state["params"]
+
+    # ---- phase 2: ETHER adaptation of the pretrained base ----
+    peft = PEFTConfig(method="ether", n_blocks=32,
+                      targets="q_proj|k_proj|v_proj|o_proj|gate_proj"
+                              "|up_proj|down_proj")
+    tr2 = Trainer(cfg, peft, adamw(constant(args.adapt_lr)),
+                  ckpt_dir=os.path.join(args.out, "adapt"), ckpt_every=20,
+                  log_path=os.path.join(args.out, "adapt.jsonl"))
+    tr2.state["params"] = base_params        # adapt the pretrained base
+    stream_b = SyntheticLMStream(vocab=cfg.vocab, batch=args.batch,
+                                 seq_len=args.seq_len, seed=777)
+    m2 = tr2.fit(stream_b, steps=args.adapt_steps)
+    print(f"ETHER adaptation done @ step {tr2.step}: {m2}", flush=True)
+
+    summary = {"params_m": n / 1e6, "pretrain": m, "adapt": m2,
+               "anomalous_steps": tr.timer.anomalies + tr2.timer.anomalies}
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+    print(json.dumps(summary, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,189 @@
+"""Fault-tolerant checkpointing.
+
+* **Atomic**: writes go to ``step_<N>.tmp/`` and are renamed into place —
+  a crash mid-write never corrupts the latest checkpoint.
+* **Async**: device→host transfer + serialization run on a writer thread;
+  the train loop blocks only if a previous save is still in flight
+  (bounded queue of 1 — backpressure instead of unbounded memory).
+* **Elastic / re-shardable**: checkpoints store *logical* arrays keyed by
+  tree path (npz) plus a JSON manifest — restoring onto a different mesh
+  or device count just re-`device_put`s with the new shardings. Nothing
+  about the device layout is persisted.
+* **Retention**: keep the last K checkpoints (+ optional keep-every-N
+  permanent saves).
+
+On a real multi-host pod each host writes its own npz shard of
+addressable data; here (single host) the full tree is written. The
+manifest format already carries ``process_index`` for that extension.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.common.pytree import flatten_with_paths
+
+PREFIX = "step_"
+
+_NATIVE_DTYPES = {
+    "bool", "int8", "int16", "int32", "int64", "uint8", "uint16",
+    "uint32", "uint64", "float16", "float32", "float64", "complex64",
+    "complex128",
+}
+
+
+def _ckpt_dirs(root: str) -> list[tuple[int, str]]:
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in os.listdir(root):
+        if name.startswith(PREFIX) and not name.endswith(".tmp"):
+            try:
+                out.append((int(name[len(PREFIX):]), os.path.join(root, name)))
+            except ValueError:
+                continue
+    return sorted(out)
+
+
+def latest_step(root: str) -> Optional[int]:
+    dirs = _ckpt_dirs(root)
+    return dirs[-1][0] if dirs else None
+
+
+class CheckpointManager:
+    def __init__(self, root: str, *, keep: int = 3,
+                 keep_every: Optional[int] = None, async_write: bool = True):
+        self.root = root
+        self.keep = keep
+        self.keep_every = keep_every
+        self.async_write = async_write
+        os.makedirs(root, exist_ok=True)
+        self._q: queue.Queue = queue.Queue(maxsize=1)
+        self._err: list[BaseException] = []
+        self._thread = None
+        if async_write:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: dict, *, extra: Optional[dict] = None,
+             block: bool = False) -> None:
+        """Snapshot ``tree`` (device arrays ok) at ``step``.
+
+        ``extra``: JSON-serializable metadata (data cursor, rng seed, …).
+        """
+        if self._err:
+            raise RuntimeError("checkpoint writer died") from self._err[0]
+        # device→host copy happens here (cheap for PEFT adapter trees);
+        # arrays are immutable so the writer thread owns safe snapshots.
+        flat = {p: np.asarray(jax.device_get(x))
+                for p, x in flatten_with_paths(tree)}
+        job = (step, flat, dict(extra or {}))
+        if self.async_write and not block:
+            self._q.put(job)          # blocks only if a save is in flight
+        else:
+            self._write(*job)
+
+    def _worker(self):
+        while True:
+            job = self._q.get()
+            if job is None:
+                self._q.task_done()
+                return
+            try:
+                self._write(*job)
+            except BaseException as e:   # surfaced on next save()
+                self._err.append(e)
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, flat: dict, extra: dict) -> None:
+        final = os.path.join(self.root, f"{PREFIX}{step}")
+        tmp = final + ".tmp"
+        if os.path.isdir(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        # npz can't round-trip ml_dtypes (bfloat16, fp8): store raw bytes
+        # + the dtype name in the manifest.
+        dtypes = {}
+        packed = {}
+        for k, v in flat.items():
+            if v.dtype.kind == "V" or str(v.dtype) not in _NATIVE_DTYPES:
+                dtypes[k] = str(v.dtype)
+                v = np.ascontiguousarray(v).view(np.uint8)
+            packed[k.replace("/", "\x1f")] = v
+        np.savez(os.path.join(tmp, "arrays.npz"), **packed)
+        manifest = {"step": step, "time": time.time(),
+                    "process_index": jax.process_index(),
+                    "n_arrays": len(flat), "dtypes": dtypes,
+                    "extra": extra}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)         # atomic publish
+        self._gc()
+
+    def _gc(self):
+        dirs = _ckpt_dirs(self.root)
+        if len(dirs) <= self.keep:
+            return
+        for step, path in dirs[:-self.keep]:
+            if self.keep_every and step % self.keep_every == 0:
+                continue
+            shutil.rmtree(path, ignore_errors=True)
+
+    def wait(self):
+        """Drain pending async saves (call before exit)."""
+        if self.async_write:
+            self._q.join()
+        if self._err:
+            raise RuntimeError("checkpoint writer died") from self._err[0]
+
+    # --------------------------------------------------------------- restore
+    def restore(self, step: Optional[int] = None, *,
+                template: Optional[dict] = None,
+                shardings: Optional[dict] = None):
+        """Load checkpoint → (tree, extra). With ``template``, arrays are
+        arranged into the template's structure (paths must match). With
+        ``shardings`` (same structure), arrays are device_put with the
+        *current* mesh's shardings — this is the elastic-restart path.
+        """
+        step = latest_step(self.root) if step is None else step
+        if step is None:
+            return None, None
+        path = os.path.join(self.root, f"{PREFIX}{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat = {k.replace("\x1f", "/"): data[k] for k in data.files}
+        for k, dt in manifest.get("dtypes", {}).items():
+            if k in flat:
+                import ml_dtypes  # noqa: F401 — registers bf16 etc.
+                flat[k] = flat[k].view(np.dtype(dt))
+        if template is None:
+            return flat, manifest["extra"]
+
+        shard_flat = (dict(flatten_with_paths(shardings))
+                      if shardings is not None else {})
+
+        from repro.common.pytree import map_with_paths
+
+        def fill(p, leaf):
+            arr = flat[p]
+            if leaf is not None and hasattr(leaf, "dtype"):
+                arr = arr.astype(leaf.dtype)
+            s = shard_flat.get(p)
+            return jax.device_put(arr, s) if s is not None else \
+                jax.numpy.asarray(arr)
+
+        return map_with_paths(fill, template), manifest["extra"]

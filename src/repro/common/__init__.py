@@ -1,0 +1,17 @@
+from repro.common.pytree import (
+    flatten_with_paths,
+    map_with_paths,
+    tree_bytes,
+    tree_count,
+    path_join,
+)
+from repro.common.dtypes import DtypePolicy
+
+__all__ = [
+    "flatten_with_paths",
+    "map_with_paths",
+    "tree_bytes",
+    "tree_count",
+    "path_join",
+    "DtypePolicy",
+]

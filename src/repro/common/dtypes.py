@@ -1,0 +1,41 @@
+"""Mixed-precision policy.
+
+TPU v5e target: bf16 params + bf16 compute, f32 accumulation (MXU native).
+CPU tests default to f32 everywhere for bit-exact oracles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypePolicy:
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    # Adapter (PEFT) params are kept in f32 always: they are tiny and the
+    # unit-normalization in ETHER is sensitive to rounding.
+    adapter_dtype: str = "float32"
+
+    @property
+    def param(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def compute(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def adapter(self):
+        return jnp.dtype(self.adapter_dtype)
+
+    @staticmethod
+    def tpu_bf16() -> "DtypePolicy":
+        return DtypePolicy(param_dtype="bfloat16", compute_dtype="bfloat16",
+                           adapter_dtype="float32")
+
+    @staticmethod
+    def cpu_f32() -> "DtypePolicy":
+        return DtypePolicy()

@@ -1,0 +1,64 @@
+"""Path-addressed pytree utilities.
+
+The whole framework treats parameters as nested dicts of arrays and
+addresses individual leaves by '/'-joined string paths, e.g.
+``layers/attn/q/kernel``.  These helpers are the single place that
+defines that path convention.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def path_join(*parts: str) -> str:
+    return "/".join(p for p in parts if p)
+
+
+def _key_str(k) -> str:
+    # jax tree path entries: DictKey / SequenceKey / GetAttrKey
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def flatten_with_paths(tree: Any) -> list[tuple[str, Any]]:
+    """Flatten a pytree to [(path, leaf)] with '/'-joined string paths."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [("/".join(_key_str(k) for k in path), leaf) for path, leaf in leaves]
+
+
+def map_with_paths(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """tree_map where fn also receives the '/'-joined leaf path."""
+
+    def _fn(path, leaf):
+        return fn("/".join(_key_str(k) for k in path), leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)
+
+
+def tree_count(tree: Any) -> int:
+    """Total number of scalar elements across all leaves."""
+    return sum(int(np.prod(x.shape)) if hasattr(x, "shape") else 1
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes across all leaves (works on ShapeDtypeStructs too)."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        if hasattr(x, "shape") and hasattr(x, "dtype"):
+            total += int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+    return total
+
+
+def select_subtree(tree: Any, predicate: Callable[[str], bool]) -> dict:
+    """Return {path: leaf} for leaves whose path satisfies the predicate."""
+    return {p: l for p, l in flatten_with_paths(tree) if predicate(p)}

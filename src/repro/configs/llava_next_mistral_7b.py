@@ -1,0 +1,30 @@
+"""llava-next-mistral-7b [vlm] — Mistral-7B backbone + anyres vision stub.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+Vision tower is a STUB: input_specs() provides CLIP-ViT-L patch embeds
+(d=1024); anyres tiling → 5 tiles × 576 patches = 2880 image tokens.
+long_500k SKIPPED (full attention; DESIGN.md §5).
+"""
+
+from repro.configs._common import DENSE_TARGETS, FULL, SMOKE
+from repro.models import ModelConfig
+
+ARCH = {"id": "llava-next-mistral-7b", "family": "vlm",
+        "long_500k": False, "decode": True}
+PEFT_TARGETS = DENSE_TARGETS
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-mistral-7b", n_layers=32, d_model=4096,
+        n_heads=32, n_kv=8, d_ff=14336, vocab=32000,
+        rope_theta=1_000_000.0, frontend="vision", n_img_tokens=2880,
+        d_frontend=1024, **FULL)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llava-smoke", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+        d_ff=128, vocab=256, frontend="vision", n_img_tokens=8,
+        d_frontend=32, **SMOKE)

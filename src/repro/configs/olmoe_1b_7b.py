@@ -1,0 +1,25 @@
+"""olmoe-1b-7b [moe] — 16L d_model=2048 16H (GQA kv=16) d_ff(expert)=1024
+vocab=50304, MoE 64 experts top-8. [arXiv:2409.02060; hf]
+long_500k SKIPPED (full attention).
+"""
+
+from repro.configs._common import DENSE_TARGETS, FULL, SMOKE
+from repro.models import ModelConfig
+
+ARCH = {"id": "olmoe-1b-7b", "family": "moe",
+        "long_500k": False, "decode": True}
+PEFT_TARGETS = DENSE_TARGETS
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b", n_layers=16, d_model=2048, n_heads=16,
+        n_kv=16, d_ff=1024, vocab=50304, mlp_type="moe", n_experts=64,
+        top_k=8, capacity_factor=1.25, tie_embeddings=False, **FULL)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-smoke", n_layers=2, d_model=64, n_heads=4, n_kv=4,
+        d_ff=64, vocab=256, mlp_type="moe", n_experts=4, top_k=2,
+        tie_embeddings=False, **SMOKE)

@@ -1,0 +1,28 @@
+"""qwen3-moe-235b-a22b [moe] — 94L d_model=4096 64H (GQA kv=4)
+d_ff(expert)=1536 vocab=151936, MoE 128 experts top-8, head_dim=128.
+[hf:Qwen/Qwen3-30B-A3B; hf]
+long_500k SKIPPED (full attention). ETHER adapters attach per-expert and
+shard with the EP axis.
+"""
+
+from repro.configs._common import DENSE_TARGETS, FULL, SMOKE
+from repro.models import ModelConfig
+
+ARCH = {"id": "qwen3-moe-235b-a22b", "family": "moe",
+        "long_500k": False, "decode": True}
+PEFT_TARGETS = DENSE_TARGETS
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-235b-a22b", n_layers=94, d_model=4096,
+        n_heads=64, n_kv=4, head_dim=128, d_ff=1536, vocab=151936,
+        rope_theta=1_000_000.0, mlp_type="moe", n_experts=128, top_k=8,
+        capacity_factor=1.25, tie_embeddings=False, **FULL)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-smoke", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+        head_dim=16, d_ff=64, vocab=256, mlp_type="moe", n_experts=8,
+        top_k=2, tie_embeddings=False, **SMOKE)

@@ -1,0 +1,30 @@
+"""recurrentgemma-9b [hybrid] — 38L d_model=4096 16H (GQA kv=1, MQA)
+d_ff=12288 vocab=256000, RG-LRU + local attention 1:2 (pattern
+rglru,rglru,local_attn; 38 = 12 units + 2 remainder recurrent layers),
+window 2048. [arXiv:2402.19427; unverified]
+Sub-quadratic (linear recurrence + ring-buffer window cache) →
+long_500k RUNS.
+"""
+
+from repro.configs._common import FULL, HYBRID_TARGETS, SMOKE
+from repro.models import ModelConfig
+
+ARCH = {"id": "recurrentgemma-9b", "family": "hybrid",
+        "long_500k": True, "decode": True}
+PEFT_TARGETS = HYBRID_TARGETS
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b", n_layers=38, d_model=4096, n_heads=16,
+        n_kv=1, d_ff=12288, vocab=256000,
+        block_pattern=("rglru", "rglru", "local_attn"), window=2048,
+        rnn_width=4096, rnn_heads=16, act="gelu_tanh", **FULL)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-smoke", n_layers=5, d_model=64, n_heads=4,
+        n_kv=1, d_ff=128, vocab=256,
+        block_pattern=("rglru", "rglru", "local_attn"), window=16,
+        rnn_width=64, rnn_heads=4, act="gelu_tanh", **SMOKE)

@@ -1,0 +1,32 @@
+"""whisper-large-v3 [audio] — enc-dec, 32L enc + 32L dec, d_model=1280
+20H (kv=20) d_ff=5120 vocab=51866, conv frontend STUB (input_specs()
+provides 1500 precomputed frame embeddings). [arXiv:2212.04356;
+unverified]
+long_500k SKIPPED (quadratic decoder self-attention). Decoder positions
+are learned and sized to the assigned decode shape (32k).
+"""
+
+from repro.configs._common import ENCDEC_TARGETS, FULL, SMOKE
+from repro.models import EncDecConfig
+
+ARCH = {"id": "whisper-large-v3", "family": "audio",
+        "long_500k": False, "decode": True}
+PEFT_TARGETS = ENCDEC_TARGETS
+
+
+def full() -> EncDecConfig:
+    kw = dict(FULL)
+    kw.pop("loss_chunk", None)
+    return EncDecConfig(
+        name="whisper-large-v3", enc_layers=32, dec_layers=32,
+        d_model=1280, n_heads=20, n_kv=20, d_ff=5120, vocab=51866,
+        n_frames=1500, max_positions=32768, **kw)
+
+
+def smoke() -> EncDecConfig:
+    kw = dict(SMOKE)
+    kw.pop("loss_chunk", None)
+    return EncDecConfig(
+        name="whisper-smoke", enc_layers=2, dec_layers=2, d_model=64,
+        n_heads=4, n_kv=4, d_ff=128, vocab=256, n_frames=16,
+        max_positions=128, **kw)

@@ -1,0 +1,47 @@
+"""ETHER core — the paper's contribution as a composable JAX module.
+
+Public API:
+    PEFTConfig, adapted_dense, init_adapters, merge_params, get_adapter,
+    adapters_param_count, metrics (transform_distance, hyperspherical_energy).
+"""
+
+from repro.core.transforms import (
+    METHODS,
+    PEFTConfig,
+    adapted_dense,
+    adapter_param_count,
+    block_diag_matmul,
+    householder_blocks,
+    init_adapter,
+    materialize_transform,
+    merge_weight,
+    reflect_activation,
+    reflect_activation_batched,
+    reflect_weight,
+    resolve_blocks,
+)
+from repro.core.peft import (
+    adapters_param_count,
+    get_adapter,
+    init_adapters,
+    is_target,
+    merge_params,
+    trainable_mask,
+)
+from repro.core.metrics import (
+    frobenius,
+    he_difference,
+    hyperspherical_energy,
+    transform_distance,
+    weights_distance,
+)
+
+__all__ = [
+    "METHODS", "PEFTConfig", "adapted_dense", "adapter_param_count",
+    "block_diag_matmul", "householder_blocks", "init_adapter",
+    "materialize_transform", "merge_weight", "reflect_activation",
+    "reflect_activation_batched", "reflect_weight", "resolve_blocks",
+    "adapters_param_count", "get_adapter", "init_adapters", "is_target",
+    "merge_params", "trainable_mask", "frobenius", "he_difference",
+    "hyperspherical_energy", "transform_distance", "weights_distance",
+]

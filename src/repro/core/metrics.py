@@ -1,0 +1,55 @@
+"""Paper §4/§5.3 analysis metrics.
+
+* Transformation distance ``‖T − I‖_F`` (Fig. 4 left) — provably 2 for
+  ETHER, ≤2 for ETHER+, unbounded for OFT/Naive.
+* Weights distance ``‖W' − W‖_F`` (Fig. 4 right).
+* Hyperspherical energy (Fig. 7 / Table 6) — the quantity OFT argues must
+  be preserved and the paper shows need not be.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.transforms import PEFTConfig, materialize_transform, merge_weight
+
+
+def frobenius(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+
+
+def transform_distance(adapter, cfg: PEFTConfig, d_in: int, d_out: int):
+    """‖T_L − I‖_F (and ‖T_R − I‖_F when two-sided); None for additive
+    methods, whose natural distance is ‖ΔW‖_F instead."""
+    TL, TR = materialize_transform(adapter, cfg, d_in, d_out)
+    left = None if TL is None else frobenius(TL - jnp.eye(d_in, dtype=TL.dtype))
+    right = None if TR is None else frobenius(TR - jnp.eye(d_out, dtype=TR.dtype))
+    return left, right
+
+
+def weights_distance(W, adapter, cfg: PEFTConfig):
+    """‖merge(W, adapter) − W‖_F (Fig. 4 right panel)."""
+    return frobenius(merge_weight(W, adapter, cfg) - W)
+
+
+def hyperspherical_energy(W, eps: float = 1e-8) -> jnp.ndarray:
+    """HE(W) = Σ_{i<j} ‖ŵ_i − ŵ_j‖⁻¹ over unit-normalized neurons.
+
+    Neurons are the columns of W (each neuron w_i ∈ R^d_in), following
+    Qiu et al. (2023). O(f²·d) — use at analysis scale only.
+    """
+    Wn = W.astype(jnp.float32)
+    Wn = Wn / (jnp.linalg.norm(Wn, axis=0, keepdims=True) + eps)
+    # pairwise squared distances via the Gram matrix
+    g = Wn.T @ Wn                                      # (f, f)
+    sq = jnp.clip(2.0 - 2.0 * g, 0.0, None)
+    f = W.shape[1]
+    mask = jnp.triu(jnp.ones((f, f), bool), k=1)
+    inv = jnp.where(mask, 1.0 / jnp.sqrt(sq + eps), 0.0)
+    return jnp.sum(inv)
+
+
+def he_difference(W, adapter, cfg: PEFTConfig):
+    """ΔHE between finetuned and pretrained weights (Fig. 7)."""
+    return (hyperspherical_energy(merge_weight(W, adapter, cfg))
+            - hyperspherical_energy(W))

@@ -1,0 +1,159 @@
+"""PEFT adapter-tree machinery.
+
+Builds, counts, and merges adapter parameter trees that mirror a model's
+parameter tree. Works for arbitrarily *stacked* weights: scan-over-layers
+kernels of shape (L, d, f) and MoE expert banks (L, E, d, f) get adapters
+with matching leading stack dims (initialized independently per slice), so
+``jax.lax.scan`` slices base weights and adapters in lockstep.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import flatten_with_paths
+from repro.core.transforms import (
+    PEFTConfig,
+    adapter_param_count,
+    init_adapter,
+    merge_weight,
+)
+
+Params = dict[str, Any]
+
+
+def _target_patterns(cfg: PEFTConfig) -> list[re.Pattern]:
+    return [re.compile(p) for p in cfg.targets.split("+") if p]
+
+
+def is_target(path: str, leaf, cfg: PEFTConfig) -> bool:
+    """A leaf is adaptable iff it is a >=2-D 'kernel' whose module name
+    matches one of the target patterns."""
+    if not path.endswith("/kernel") or getattr(leaf, "ndim", 0) < 2:
+        return False
+    module = path.rsplit("/", 1)[0]
+    return any(p.search(module) for p in _target_patterns(cfg))
+
+
+def _insert(tree: dict, path: str, value) -> None:
+    keys = path.split("/")
+    node = tree
+    for k in keys[:-1]:
+        node = node.setdefault(k, {})
+    node[keys[-1]] = value
+
+
+def init_adapters(rng: jax.Array, params: Params, cfg: PEFTConfig) -> Params:
+    """Adapter tree mirroring ``params``: at each targeted ``<mod>/kernel``
+    the adapter dict lives at ``<mod>`` (sibling of the kernel)."""
+    if cfg.method == "full":
+        return {}
+    adapters: Params = {}
+    targets = [(p, l) for p, l in flatten_with_paths(params)
+               if is_target(p, l, cfg)]
+    keys = jax.random.split(rng, max(len(targets), 1))
+    for key, (path, leaf) in zip(keys, targets):
+        stack, (d_in, d_out) = leaf.shape[:-2], leaf.shape[-2:]
+        if stack:
+            flat = int(np.prod(stack))
+            sub = jax.random.split(key, flat)
+
+            def _init(k):
+                return init_adapter(k, cfg.method, d_in, d_out, cfg)
+
+            stacked = jax.vmap(_init)(sub)
+            stacked = jax.tree_util.tree_map(
+                lambda x: x.reshape(*stack, *x.shape[1:]), stacked)
+            _insert(adapters, path.rsplit("/", 1)[0], stacked)
+        else:
+            _insert(adapters, path.rsplit("/", 1)[0],
+                    init_adapter(key, cfg.method, d_in, d_out, cfg))
+    return adapters
+
+
+def adapters_param_count(params: Params, cfg: PEFTConfig) -> int:
+    """Trainable adapter parameters for the whole model (paper '#params')."""
+    if cfg.method == "full":
+        from repro.common.pytree import tree_count
+        return tree_count(params)
+    total = 0
+    for path, leaf in flatten_with_paths(params):
+        if is_target(path, leaf, cfg):
+            stack = int(np.prod(leaf.shape[:-2])) if leaf.ndim > 2 else 1
+            total += stack * adapter_param_count(
+                cfg.method, leaf.shape[-2], leaf.shape[-1], cfg)
+    return total
+
+
+def merge_params(params: Params, adapters: Params, cfg: PEFTConfig) -> Params:
+    """Absorb all adapters into the base weights (zero-latency serving)."""
+    if cfg.method == "full" or not adapters:
+        return params
+    flat_adapters = dict(_flatten_adapter_modules(adapters))
+    out = jax.tree_util.tree_map(lambda x: x, params)  # shallow copy
+
+    def _merge_leaf(path: str, kernel):
+        mod = path.rsplit("/", 1)[0]
+        if mod not in flat_adapters or not path.endswith("/kernel"):
+            return kernel
+        adapter = flat_adapters[mod]
+        stack = kernel.shape[:-2]
+        if stack:
+            flat = int(np.prod(stack))
+            k2 = kernel.reshape(flat, *kernel.shape[-2:])
+            a2 = jax.tree_util.tree_map(
+                lambda x: x.reshape(flat, *x.shape[len(stack):]), adapter)
+            merged = jax.vmap(lambda w, a: merge_weight(w, a, cfg))(k2, a2)
+            return merged.reshape(kernel.shape)
+        return merge_weight(kernel, adapter, cfg)
+
+    from repro.common.pytree import map_with_paths
+    return map_with_paths(_merge_leaf, out)
+
+
+def _flatten_adapter_modules(adapters: Params, prefix: str = ""):
+    """Yield (module_path, adapter_dict) pairs from the nested adapter tree.
+
+    An adapter dict is recognized as a dict whose values are arrays (leaves),
+    e.g. {'u': ...} or {'a': ..., 'b': ...}.
+    """
+    if isinstance(adapters, dict) and adapters and all(
+            not isinstance(v, dict) for v in adapters.values()):
+        yield prefix, adapters
+        return
+    if isinstance(adapters, dict):
+        for k, v in adapters.items():
+            yield from _flatten_adapter_modules(
+                v, f"{prefix}/{k}" if prefix else k)
+
+
+def get_adapter(adapters: Optional[Params], *keys: str) -> Optional[Params]:
+    """Navigate the adapter tree in lockstep with the params tree; returns
+    None when the module was not targeted."""
+    node = adapters
+    for k in keys:
+        if not isinstance(node, dict) or k not in node:
+            return None
+        node = node[k]
+    return node  # type: ignore[return-value]
+
+
+def trainable_mask(params: Params, adapters: Params, cfg: PEFTConfig):
+    """(base_mask, adapter_mask): which leaves receive gradients/updates.
+
+    PEFT: only float adapter leaves train. Full finetuning: all float base
+    params train.
+    """
+    def _is_float(x):
+        return jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+
+    if cfg.method == "full":
+        return (jax.tree_util.tree_map(_is_float, params),
+                jax.tree_util.tree_map(lambda x: False, adapters))
+    return (jax.tree_util.tree_map(lambda x: False, params),
+            jax.tree_util.tree_map(_is_float, adapters))

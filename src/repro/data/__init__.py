@@ -1,0 +1,10 @@
+from repro.data.pipeline import (
+    DataState,
+    PackedBinaryDataset,
+    SyntheticLMStream,
+    make_stream,
+    shard_batch,
+)
+
+__all__ = ["DataState", "PackedBinaryDataset", "SyntheticLMStream",
+           "make_stream", "shard_batch"]

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+with jit'd wrappers in ops.py and pure-jnp oracles in ref.py. All are
+validated on CPU in interpret mode (tests/test_kernels.py) and target
+TPU v5e MXU/VMEM geometry:
+
+    ether_reflect     — block-diagonal Householder reflection of
+                        activations (the activation-side ETHER hot op)
+    householder_gemm  — fused reflect-inside-GEMM: (H_B W)ᵀx without
+                        materializing transformed weights anywhere
+    ether_merge       — weight-side H_B·W (adapter absorption)
+    flash_attention   — online-softmax attention, causal/window, GQA
+                        head-folding via index maps
+    ssd_scan          — Mamba-2 SSD intra-chunk dual form (+ XLA
+                        inter-chunk scan in ops.ssd_chunked_pallas)
+"""

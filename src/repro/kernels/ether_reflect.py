@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: block-diagonal Householder reflection of activations.
+
+This is the hot op of the *activation-side* ETHER execution mode
+(DESIGN.md §3): ``H_B x = x − 2û(ûᵀx)`` applied blockwise on the feature
+dim.  Cost O(tokens·d) — the GEMM that follows consumes the frozen weight
+unchanged, so ETHER adds zero weight-side HBM traffic.
+
+Tiling: tokens are tiled by ``block_t`` rows; the full (n, db) hyperplane
+bank rides along in VMEM (a few KB — ETHER params are tiny by design).
+VMEM per step ≈ 2·block_t·d·4B + n·db·4B; block_t=256, d=8192 → ~16 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reflect_kernel(u_ref, x_ref, o_ref, *, n: int, db: int):
+    u = u_ref[...].astype(jnp.float32)                       # (n, db)
+    norm = jnp.sqrt(jnp.sum(u * u, axis=-1, keepdims=True))
+    un = u / (norm + 1e-8)
+    x = x_ref[...].astype(jnp.float32)                       # (Tm, d)
+    tm = x.shape[0]
+    xb = x.reshape(tm, n, db)
+    proj = jnp.einsum("tnb,nb->tn", xb, un)                  # ûᵀx per block
+    out = xb - 2.0 * proj[..., None] * un[None]
+    o_ref[...] = out.reshape(tm, n * db).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def ether_reflect_pallas(x: jax.Array, u: jax.Array, *, block_t: int = 256,
+                         interpret: bool = True) -> jax.Array:
+    """x: (T, d) tokens; u: (n, db) with n*db == d. Returns H_B x."""
+    t, d = x.shape
+    n, db = u.shape
+    assert n * db == d, (n, db, d)
+    block_t = min(block_t, t)
+    assert t % block_t == 0, "caller pads tokens to a multiple of block_t"
+    grid = (t // block_t,)
+    return pl.pallas_call(
+        functools.partial(_reflect_kernel, n=n, db=db),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, db), lambda i: (0, 0)),         # whole bank
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=interpret,
+    )(u, x)

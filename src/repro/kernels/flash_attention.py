@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: flash attention (online softmax), causal + sliding
+window, GQA-aware via index-map head folding (KV never repeated in HBM).
+
+Grid (B, H, nQ, nK), K innermost; running max/denominator/accumulator in
+f32 VMEM scratch. VMEM per step ≈ (2·Tq·D + 2·Tk·D + Tq·Tk)·4B —
+Tq=Tk=128, D=128 → ~0.4 MB, far under the ~16 MB budget, so block sizes
+are MXU-bound (128-aligned), not VMEM-bound.
+
+``q_offset`` supports cached-prefix decode: query row i has absolute
+position ``q_offset + i`` against kv positions [0, T).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  q_offset: int, block_q: int, block_k: int):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # (Tq, D)
+    k = k_ref[0, 0].astype(jnp.float32)                      # (Tk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qi = pl.program_id(2)
+    qpos = (q_offset + qi * block_q
+            + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0))
+    kpos = (ki * block_k
+            + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1))
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(
+                        p, v_ref[0, 0].astype(jnp.float32),
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "q_offset",
+                                    "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int | None = None,
+                           q_offset: int = 0, block_q: int = 128,
+                           block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, Hkv, T, D), H % Hkv == 0."""
+    b, h, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    assert h % hkv == 0
+    rep = h // hkv
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    assert s % block_q == 0 and t % block_k == 0
+    scale = float(1.0 / (d ** 0.5))
+    grid = (b, h, s // block_q, t // block_k)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, q_offset=q_offset,
+                          block_q=block_q, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki: (bi, hi // rep, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bi, hi, qi, ki: (bi, hi // rep, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,133 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Every wrapper auto-selects interpret mode (Python emulation) off-TPU so
+the identical kernel code is validated on CPU and deployed on TPU, and
+falls back to the pure-jnp reference for shapes the kernel's tiling
+constraints reject (odd remainders); the tests sweep both paths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ether_reflect import ether_reflect_pallas
+from repro.kernels.ether_merge import ether_merge_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.householder_gemm import householder_gemm_pallas
+
+
+def _interpret(flag):
+    if flag is not None:
+        return bool(flag)
+    return jax.default_backend() != "tpu"
+
+
+def ether_reflect(x: jax.Array, u: jax.Array, *, block_t: int = 256,
+                  interpret: bool | None = None) -> jax.Array:
+    """H_B x over the last dim; x may have any leading dims."""
+    import math
+    d = x.shape[-1]
+    t = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
+    x2 = x.reshape(t, d)
+    bt = min(block_t, t)
+    if t % bt:
+        return ref.ref_ether_reflect(x2, u).reshape(x.shape)
+    out = ether_reflect_pallas(x2, u, block_t=bt,
+                               interpret=_interpret(interpret))
+    return out.reshape(x.shape)
+
+
+def householder_gemm(x: jax.Array, w: jax.Array, u: jax.Array, *,
+                     interpret: bool | None = None) -> jax.Array:
+    """reflect(x) @ w; x: (..., d); w: (d, f)."""
+    d, f = w.shape
+    lead = x.shape[:-1]
+    t = 1
+    for sdim in lead:
+        t *= int(sdim)
+    x2 = x.reshape(t, d)
+    n, db = u.shape
+    bm = 128 if t % 128 == 0 else (t if t <= 256 else 0)
+    bf = 128 if f % 128 == 0 else 0
+    bk = db * max(1, min(512, d) // db)
+    if not bm or not bf or d % bk:
+        return ref.ref_householder_gemm(x2, w, u).reshape(*lead, f)
+    out = householder_gemm_pallas(x2, w, u, block_m=bm, block_f=bf,
+                                  block_k=bk,
+                                  interpret=_interpret(interpret))
+    return out.reshape(*lead, f)
+
+
+def ether_merge(w: jax.Array, u: jax.Array, *,
+                interpret: bool | None = None) -> jax.Array:
+    """H_B w for adapter absorption. w: (d, f)."""
+    d, f = w.shape
+    bf = 512 if f % 512 == 0 else (128 if f % 128 == 0 else 0)
+    if not bf:
+        return ref.ref_ether_merge(w, u)
+    return ether_merge_pallas(w, u, block_f=bf,
+                              interpret=_interpret(interpret))
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    q_offset: int = 0, interpret: bool | None = None
+                    ) -> jax.Array:
+    """Flash attention; falls back to exact ref for non-128-tileable S/T."""
+    s, t = q.shape[2], k.shape[2]
+    bq = 128 if s % 128 == 0 else (s if s <= 128 else 0)
+    bk = 128 if t % 128 == 0 else (t if t <= 128 else 0)
+    if not bq or not bk:
+        return ref.ref_flash_attention(q, k, v, causal=causal, window=window)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset, block_q=bq, block_k=bk,
+                                  interpret=_interpret(interpret))
+
+
+def ssd_chunked_pallas(xv, a, b, c, *, chunk: int = 128,
+                       interpret: bool | None = None):
+    """Full SSD via the Pallas intra-chunk kernel + XLA inter-chunk scan.
+
+    xv: (B,S,H,P); a: (B,S,H); b/c: (B,S,G,N). Mirrors
+    models.ssm.ssd_chunked (zero initial state); returns (y, final_state).
+    """
+    import jax
+    B, S, H, P = xv.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    if S % chunk:
+        return None  # caller falls back to the jnp path
+    from repro.kernels.ssd_scan import ssd_chunk_pallas
+    f32 = jnp.float32
+    bh = jnp.repeat(b, rep, axis=2)
+    ch = jnp.repeat(c, rep, axis=2)
+    fold = lambda t: t.transpose(0, 2, 1, *range(3, t.ndim)).reshape(
+        B * H, S, *t.shape[3:])
+    xv2 = fold(xv.astype(f32))
+    a2 = a.astype(f32).transpose(0, 2, 1).reshape(B * H, S)
+    b2 = fold(bh.astype(f32))
+    c2 = fold(ch.astype(f32))
+    y_intra, states, decays = ssd_chunk_pallas(
+        xv2, a2, b2, c2, chunk=chunk, interpret=_interpret(interpret))
+
+    # inter-chunk recurrence (cheap, O(nc))
+    def step(carry, inp):
+        s_c, dec = inp
+        new = dec[:, None, None] * carry + s_c
+        return new, carry
+    init = jnp.zeros((B * H, N, P), f32)
+    final, prev = jax.lax.scan(
+        step, init, (states.transpose(1, 0, 2, 3),
+                     decays.transpose(1, 0)))
+    prev = prev.transpose(1, 0, 2, 3)               # (BH, nc, N, P)
+    # y_inter[t] = exp(cum_t) · C_t · prev_state(chunk of t)
+    nc = S // chunk
+    a4 = a2.reshape(B * H, nc, chunk)
+    cum = jnp.cumsum(a4, axis=-1)
+    c4 = c2.reshape(B * H, nc, chunk, N)
+    y_inter = jnp.einsum("kcln,kcnp,kcl->kclp", c4, prev, jnp.exp(cum))
+    y = y_intra.reshape(B * H, nc, chunk, P) + y_inter
+    y = y.reshape(B * H, S, P).reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    return y.astype(xv.dtype), final.reshape(B, H, N, P)

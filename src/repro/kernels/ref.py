@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the kernel allclose sweeps in
+tests/test_kernels.py and deliberately use the most naive formulation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_ether_reflect(x, u):
+    """Block-diagonal Householder reflection of activations.
+
+    x: (T, d); u: (n, db) raw vectors, d = n*db. Returns H_B x.
+    """
+    n, db = u.shape
+    uh = u / (jnp.linalg.norm(u, axis=-1, keepdims=True) + 1e-8)
+    xb = x.reshape(*x.shape[:-1], n, db)
+    proj = jnp.einsum("...nb,nb->...n", xb, uh.astype(x.dtype))
+    out = xb - 2.0 * proj[..., None] * uh.astype(x.dtype)
+    return out.reshape(x.shape)
+
+
+def ref_householder_gemm(x, w, u):
+    """Fused (H_B W)ᵀx: y = reflect(x) @ W.  x: (T, d); w: (d, f)."""
+    return ref_ether_reflect(x, u) @ w.astype(x.dtype)
+
+
+def ref_ether_merge(w, u):
+    """Weight-side block-diagonal reflection W' = H_B W. w: (d, f)."""
+    n, db = u.shape
+    d, f = w.shape
+    uh = (u / (jnp.linalg.norm(u, axis=-1, keepdims=True) + 1e-8)).astype(w.dtype)
+    wb = w.reshape(n, db, f)
+    proj = jnp.einsum("nb,nbf->nf", uh, wb)
+    return (wb - 2.0 * uh[:, :, None] * proj[:, None, :]).reshape(d, f)
+
+
+def ref_flash_attention(q, k, v, *, causal=True, window=None, scale=None):
+    """Exact softmax attention. q: (B, H, S, D); k/v: (B, Hkv, T, D).
+
+    GQA: H must be a multiple of Hkv (kv heads repeated). ``window`` masks
+    keys older than ``window`` positions (sliding-window / local attention).
+    """
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    t = k.shape[2]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None] + (t - s)  # allow cached-prefix offsets
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = _softmax(logits)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _softmax(logits):
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(logits - m)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.maximum(z, 1e-30)
+
+
+def ref_ssd_chunk_scan(xv, a, b, c, chunk: int):
+    """Mamba-2 SSD (state-space duality) reference, O(S·N) sequential.
+
+    xv: (B, S, H, P)   inputs (already gated/projected)
+    a:  (B, S, H)      log-decay per head (a = -softplus(...) ≤ 0)
+    b:  (B, S, G, N)   input projection (G state groups)
+    c:  (B, S, G, N)   output projection
+    Returns y: (B, S, H, P). Heads are grouped onto G groups (H % G == 0).
+    Naive recurrence: state_{t} = exp(a_t)·state_{t-1} + B_t ⊗ x_t.
+    """
+    B, S, H, P = xv.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    bh = jnp.repeat(b, rep, axis=2)   # (B, S, H, N)
+    ch = jnp.repeat(c, rep, axis=2)
+
+    def step(state, inp):
+        x_t, a_t, b_t, c_t = inp
+        state = jnp.exp(a_t)[..., None, None] * state + \
+            jnp.einsum("bhn,bhp->bhnp", b_t, x_t)
+        y_t = jnp.einsum("bhn,bhnp->bhp", c_t, state)
+        return state, y_t
+
+    state0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(xv.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(bh.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(ch.astype(jnp.float32), 1, 0))
+    _, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xv.dtype)

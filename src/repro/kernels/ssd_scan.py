@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunk scan (intra-chunk dual form).
+
+One grid step processes one (batch, head, chunk) tile entirely in VMEM:
+builds the decay-masked score matrix (L·CBᵀ), produces the intra-chunk
+output and the chunk's summary state — the MXU-heavy inner part of
+models/ssm.ssd_chunked. The O(S) inter-chunk state recurrence stays in
+XLA (jax.lax.scan over the emitted summaries): it is bandwidth-trivial
+and keeping it outside lets the kernel stay embarrassingly parallel.
+
+VMEM per step ≈ L·(N+P)·3·4B + L²·4B; L=128, N=P=128 → ~0.5 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(xv_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
+                      decay_ref, *, chunk: int):
+    xv = xv_ref[0, 0].astype(jnp.float32)          # (L, P)
+    a = a_ref[0, 0].astype(jnp.float32)            # (L,)
+    bm = b_ref[0, 0].astype(jnp.float32)           # (L, N)
+    cm = c_ref[0, 0].astype(jnp.float32)           # (L, N)
+
+    cum = jnp.cumsum(a)                            # (L,)
+    # decay-masked scores: exp(cum_i − cum_j) for i ≥ j
+    diff = cum[:, None] - cum[None, :]
+    il = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jl = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = il >= jl
+    scores = jnp.where(mask, jnp.exp(diff), 0.0)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    y = jax.lax.dot_general(scores * cb, xv, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (L, P)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    # chunk summary state: Σ_j exp(cum_L − cum_j) b_j ⊗ x_j   (N, P)
+    w = jnp.exp(cum[-1] - cum)                     # (L,)
+    state = jax.lax.dot_general(bm * w[:, None], xv,
+                                (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    state_ref[0, 0] = state.astype(state_ref.dtype)
+    decay_ref[0, 0, 0] = jnp.exp(cum[-1]).astype(decay_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_pallas(xv, a, b, c, *, chunk: int = 128,
+                     interpret: bool = True):
+    """Intra-chunk SSD. xv: (BH, S, P); a: (BH, S); b/c: (BH, S, N),
+    already head-expanded. S % chunk == 0.
+
+    Returns (y_intra (BH,S,P), states (BH,nc,N,P), decays (BH,nc)) — the
+    caller runs the inter-chunk scan and adds C·(carried state) terms.
+    """
+    bh, s, p = xv.shape
+    n = b.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    x4 = xv.reshape(bh, nc, chunk, p)
+    a4 = a.reshape(bh, nc, chunk)
+    b4 = b.reshape(bh, nc, chunk, n)
+    c4 = c.reshape(bh, nc, chunk, n)
+    grid = (bh, nc)
+    y, states, decays = pl.pallas_call(
+        functools.partial(_ssd_chunk_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nc, chunk, p), xv.dtype),
+            jax.ShapeDtypeStruct((bh, nc, n, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nc, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x4, a4, b4, c4)
+    return y.reshape(bh, s, p), states, decays[..., 0]

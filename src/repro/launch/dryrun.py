@@ -1,0 +1,243 @@
+"""Multi-pod dry-run: prove every (arch × shape × mesh) cell lowers,
+SPMD-partitions, compiles, and fits — without hardware.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-1.3b \
+        --shape long_500k --multi-pod
+
+Writes one JSON per cell to experiments/dryrun/ with cost/memory/
+collective stats — benchmarks/roofline.py turns these into the
+EXPERIMENTS.md §Roofline table.
+"""
+
+# The VERY FIRST lines, before ANY other import (jax locks device count
+# on first init):
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ALIASES, ASSIGNED, get_config, peft_targets  # noqa: E402
+from repro.core.transforms import PEFTConfig                 # noqa: E402
+from repro.launch.hlostats import cost_stats, memory_stats   # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo            # noqa: E402
+from repro.launch.mesh import make_production_mesh            # noqa: E402
+from repro.launch.specs import (SHAPES, active_param_count,   # noqa: E402
+                                cell_supported, input_specs, param_count)
+from repro.launch.steps import (abstract_state, batch_shardings,      # noqa: E402
+                                make_serve_fns, make_train_step,
+                                serve_shardings, state_shardings)
+from repro.optim import adamw, cosine                         # noqa: E402
+from repro.parallel.context import MeshContext, mesh_context  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             peft_method: str = "ether", peft_mode: str = "activation",
+             seq_shard: bool = True, head_shard_attn: bool = True,
+             attn_probs_bf16: bool = False, moe_a2a: bool = True,
+             remat: str | None = None, save_hlo: bool = False,
+             out_dir: str = OUT_DIR, tag: str = "") -> dict:
+    """Lower + compile one cell; return (and persist) the stats record."""
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "peft": peft_method, "peft_mode": peft_mode, "tag": tag}
+    ok, reason = cell_supported(arch, shape)
+    if not ok:
+        rec.update({"status": "skipped", "reason": reason})
+        return _persist(rec, out_dir)
+
+    cfg = get_config(arch, "full")
+    if remat is not None and hasattr(cfg, "remat"):
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, remat=remat)
+    peft = PEFTConfig(method=peft_method, n_blocks=32,
+                      targets=peft_targets(arch), mode=peft_mode)
+    info = SHAPES[shape]
+    kind = info["kind"]
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # §Perf final: head-sharded attention helps decode (co-locates with
+    # TP weights; no seq-sharding at S=1) but HURTS train/prefill
+    # (gather-to-heads fights the sequence-sharded residual — measured
+    # +49% link on llava train). Gate it to decode.
+    ctx = MeshContext(mesh, seq_shard=seq_shard,
+                      head_shard_attn=head_shard_attn
+                      and kind == "decode",
+                      attn_probs_bf16=attn_probs_bf16, moe_a2a=moe_a2a)
+    t0 = time.time()
+    with mesh_context(ctx):
+        specs = input_specs(cfg, shape)
+        if kind == "train":
+            opt = adamw(cosine(2e-3, 1000))
+            state_sds = abstract_state(cfg, peft, opt)
+            st_sh = state_shardings(state_sds, mesh)
+            b_sh = batch_shardings(specs, mesh)
+            step = make_train_step(cfg, peft, opt)
+            jitted = jax.jit(step, in_shardings=(st_sh, b_sh),
+                             out_shardings=(st_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_sds, specs)
+        elif kind == "prefill":
+            sp, _ = make_serve_fns(cfg, peft)
+            state_sds = abstract_state(cfg, peft, adamw(cosine(1e-3, 10)))
+            st_sh = state_shardings(state_sds, mesh, serve=True)
+            b_sh = batch_shardings(specs, mesh)
+            jitted = jax.jit(sp, in_shardings=(st_sh["params"],
+                                               st_sh["adapters"], b_sh))
+            lowered = jitted.lower(state_sds["params"],
+                                   state_sds["adapters"], specs)
+        else:  # decode
+            _, ss = make_serve_fns(cfg, peft)
+            state_sds = abstract_state(cfg, peft, adamw(cosine(1e-3, 10)))
+            st_sh = state_shardings(state_sds, mesh, serve=True)
+            sv_sh = serve_shardings(specs, mesh)
+            jitted = jax.jit(ss, in_shardings=(st_sh["params"],
+                                               st_sh["adapters"],
+                                               sv_sh["cache"],
+                                               sv_sh["tokens"]),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(state_sds["params"],
+                                   state_sds["adapters"],
+                                   specs["cache"], specs["tokens"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    hlo = compiled.as_text()
+    n_chips = 512 if multi_pod else 256
+    tokens = (info["batch"] * info["seq"] if kind != "decode"
+              else info["batch"])
+    n_active = active_param_count(cfg)
+    analysis = analyze_hlo(hlo)   # loop-aware per-chip flops/bytes/links
+    rec.update({
+        "status": "ok",
+        "n_chips": n_chips,
+        "seq": info["seq"], "batch": info["batch"], "kind": kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params": param_count(cfg), "active_params": n_active,
+        "tokens": tokens,
+        "model_flops": (6 if kind == "train" else 2) * n_active * tokens,
+        "analysis": analysis,
+        "cost": cost_stats(compiled),
+        "memory": memory_stats(compiled),
+        "hlo_lines": hlo.count("\n"),
+    })
+    if save_hlo:
+        hp = os.path.join(out_dir, _cell_name(rec) + ".hlo.txt")
+        os.makedirs(out_dir, exist_ok=True)
+        with open(hp, "w") as f:
+            f.write(hlo)
+        rec["hlo_path"] = hp
+    return _persist(rec, out_dir)
+
+
+def _cell_name(rec):
+    tag = f"_{rec['tag']}" if rec.get("tag") else ""
+    return (f"{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+            f"_{rec['peft']}-{rec['peft_mode']}{tag}").replace("/", "-")
+
+
+def _persist(rec, out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, _cell_name(rec) + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="arch id (default: all assigned)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run 16x16 AND 2x16x16 for each cell")
+    ap.add_argument("--all", action="store_true",
+                    help="all assigned archs × shapes")
+    ap.add_argument("--peft", default="ether")
+    ap.add_argument("--peft-mode", default="activation",
+                    choices=["activation", "weight", "blockgemm"])
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--no-head-shard", action="store_true")
+    ap.add_argument("--no-moe-a2a", action="store_true")
+    ap.add_argument("--attn-bf16", action="store_true")
+    ap.add_argument("--remat", default=None, choices=["full", "dots",
+                                                      "none"])
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out-dir", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ([False, True] if args.both_meshes
+              else [args.multi_pod])
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                name = f"{arch} × {shape} × {'2x16x16' if mp else '16x16'}"
+                rec_path = os.path.join(args.out_dir, _cell_name(
+                    {"arch": arch, "shape": shape,
+                     "mesh": "2x16x16" if mp else "16x16",
+                     "peft": args.peft, "peft_mode": args.peft_mode,
+                     "tag": args.tag}) + ".json")
+                if os.path.exists(rec_path) and not args.force:
+                    with open(rec_path) as f:
+                        rec = json.load(f)
+                    print(f"[cached] {name}: {rec['status']}")
+                    results.append(rec)
+                    continue
+                print(f"[dryrun] {name} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp,
+                                   peft_method=args.peft,
+                                   peft_mode=args.peft_mode,
+                                   seq_shard=not args.no_seq_shard,
+                                   head_shard_attn=not args.no_head_shard,
+                                   attn_probs_bf16=args.attn_bf16,
+                                   moe_a2a=not args.no_moe_a2a,
+                                   remat=args.remat,
+                                   save_hlo=args.save_hlo,
+                                   out_dir=args.out_dir, tag=args.tag)
+                    if rec["status"] == "ok":
+                        a = rec["analysis"]
+                        print(f"  ok: compile={rec['compile_s']}s "
+                              f"flops/chip={a['flops']:.3e} "
+                              f"hbm/chip={a['hbm_bytes']:.3e}B "
+                              f"link/chip={a['link_bytes']:.3e}B",
+                              flush=True)
+                    else:
+                        print(f"  skipped: {rec['reason']}", flush=True)
+                except Exception:
+                    traceback.print_exc()
+                    rec = _persist({"arch": arch, "shape": shape,
+                                    "mesh": "2x16x16" if mp else "16x16",
+                                    "peft": args.peft,
+                                    "peft_mode": args.peft_mode,
+                                    "tag": args.tag, "status": "error",
+                                    "error": traceback.format_exc()[-2000:]},
+                                   args.out_dir)
+                results.append(rec)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run summary: {n_ok} ok / {n_skip} skipped / {n_err} error")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,405 @@
+"""Loop-aware HLO analyzer — exact roofline inputs from optimized HLO.
+
+Why not ``compiled.cost_analysis()``: XLA's analysis counts a ``while``
+body ONCE, so anything inside scan-over-layers (≈ all compute and all
+FSDP collectives) is undercounted by the layer count. This walker parses
+the optimized HLO text, builds the computation call graph, and expands
+``while`` bodies by their ``known_trip_count`` backend-config (emitted by
+XLA for counted loops — every lax.scan qualifies), fusions by their
+called computation, and conditionals by the max across branches.
+
+Per-chip quantities produced:
+* ``flops``      — 2·|result|·|contraction| summed over dot/conv ops
+                   (MXU dense FLOPs; elementwise excluded by design).
+* ``hbm_bytes``  — Σ (operand + result bytes) over materializing ops
+                   (fusions, dots, collectives, copies); free ops
+                   (tuple/GTE/bitcast/parameter/constant) excluded. The
+                   standard each-op-round-trips-HBM roofline model.
+* ``link_bytes`` — ring-model link traffic: all-reduce 2×payload,
+                   all-gather payload(result), reduce-scatter
+                   payload(operand), all-to-all / collective-permute
+                   payload. (n−1)/n factor folded into the constant ≈1.
+* raw per-kind collective payloads and instruction counts.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_INSTR = re.compile(r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_SHAPE = re.compile(r"\b(" + "|".join(DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_OPCODE_AT = re.compile(r"\s*([a-z][a-z0-9\-]*)\(")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+_TO = re.compile(r"\bto=%?([\w\.\-]+)")
+_COND_BODY = re.compile(r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_FREE_OPS = {"tuple", "get-tuple-element", "parameter", "constant",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "iota", "all-gather-done", "all-reduce-done",
+             "collective-permute-done", "copy-done", "send-done",
+             "recv-done"}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "ragged-all-to-all", "collective-permute")
+
+
+def _shape_elems_bytes(seg: str) -> tuple[int, int]:
+    total_b = 0
+    total_e = 0
+    for dt, dims in _SHAPE.findall(seg):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_e += n
+        total_b += n * DTYPE_BYTES[dt]
+    return total_e, total_b
+
+
+def _split_type_op(rest: str) -> tuple[str, str, str]:
+    """rest = '<result-type> <opcode>(<args...>' → (type_seg, opcode,
+    remainder-from-opcode). Tuple result types may contain /*index=N*/
+    comments, so parens are matched with a depth scanner."""
+    rest = rest.lstrip()
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_seg = rest[:i + 1]
+                    tail = rest[i + 1:]
+                    break
+        else:
+            return rest, "", ""
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return rest, "", ""
+        type_seg, tail = rest[:sp], rest[sp:]
+    m = _OPCODE_AT.match(tail)
+    if not m:
+        return type_seg, "", tail
+    return type_seg, m.group(1), tail[m.end(1):]
+
+
+def _result_segment(rest: str) -> str:
+    return _split_type_op(rest)[0]
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[tuple[str, str]]] = {}
+        self.roots: dict[str, str] = {}    # comp name -> root instr name
+        self.shapes: dict[str, str] = {}   # instr name -> result type seg
+        self.entry: Optional[str] = None
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            if not line.strip() or line.strip().startswith("//"):
+                continue
+            if not line.startswith(" "):
+                m = _COMP_HDR.match(line.strip())
+                if m and line.rstrip().endswith("{"):
+                    cur = m.group(2)
+                    self.computations[cur] = []
+                    if m.group(1):
+                        self.entry = cur
+                    continue
+            if line.strip() == "}":
+                continue
+            m = _INSTR.match(line)
+            if m and cur is not None:
+                name, rest = m.group(1), m.group(2)
+                self.computations[cur].append((name, rest))
+                self.shapes[name] = _result_segment(rest)
+                if line.lstrip().startswith("ROOT"):
+                    self.roots[cur] = name
+        self._cache: dict[str, dict] = {}
+        self._flops_cache: dict[str, tuple[float, float]] = {}
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _args_head(tail: str) -> str:
+        """The '(%a, %b, ...)' operand list right after the opcode."""
+        if not tail.startswith("("):
+            i = tail.find("(")
+            if i < 0:
+                return ""
+            tail = tail[i:]
+        depth = 0
+        for i, ch in enumerate(tail):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return tail[:i + 1]
+        return tail
+
+
+    def _bytes_of(self, instr_name: str) -> int:
+        return _shape_elems_bytes(self.shapes.get(instr_name, ""))[1]
+
+    def _find(self, comp: str, instr_name: str) -> Optional[str]:
+        for n, r in self.computations.get(comp, []):
+            if n == instr_name:
+                return r
+        return None
+
+    _CAST_OPS = {"convert", "copy", "bitcast", "reshape", "broadcast"}
+
+    def _fusion_hbm(self, called: str, args_head: str, res_seg: str) -> float:
+        """Boundary HBM traffic of a fusion, slice- and cast-aware:
+        * a boundary operand consumed only via dynamic-slice/gather rows
+          inside the fusion contributes the slice bytes, not the buffer;
+        * a dynamic-update-slice inside the fusion aliases its target in
+          place — written bytes = update bytes, target read ≈ 0 (the
+          target is traced through convert/copy chains back to a param);
+        * fusions whose compute is pure dtype/layout casts (convert/copy/
+          bitcast/reshape/broadcast) are FREE: on TPU bf16 is native and
+          these CPU-backend promotion artifacts do not exist.
+        """
+        boundary = _OPERANDS.findall(args_head)
+        op_bytes = {i: self._bytes_of(o) for i, o in enumerate(boundary)}
+        param_idx: dict[str, int] = {}
+        producer: dict[str, tuple[str, list[str]]] = {}
+        instrs = self.computations.get(called, [])
+        real_ops: set = set()
+        dus = None
+        for n, r in instrs:
+            seg, opc, tail = _split_type_op(r)
+            ops = _OPERANDS.findall(self._args_head(tail))
+            producer[n] = (opc, ops)
+            if opc == "parameter":
+                head = self._args_head(tail)
+                try:
+                    param_idx[n] = int(head.strip("()"))
+                except ValueError:
+                    pass
+                continue
+            if opc == "dynamic-update-slice":
+                dus = (n, ops)
+            if opc and opc not in _FREE_OPS:
+                real_ops.add(opc)
+
+        if real_ops and real_ops <= self._CAST_OPS:
+            return 0.0   # pure cast/layout fusion — TPU-free
+
+        uses: dict[str, list[tuple[str, str]]] = {p: [] for p in param_idx}
+        for n, r in instrs:
+            seg, opc, tail = _split_type_op(r)
+            if opc == "parameter":
+                continue
+            for o in _OPERANDS.findall(self._args_head(tail)):
+                if o in uses:
+                    uses[o].append((opc, n))
+        for p, us in uses.items():
+            i = param_idx.get(p)
+            if i is None or i not in op_bytes or not us:
+                continue
+            if all(opc in ("dynamic-slice", "gather") for opc, _ in us):
+                op_bytes[i] = sum(self._bytes_of(n) for _, n in us)
+        _, res_bytes = _shape_elems_bytes(res_seg)
+        write_bytes = res_bytes
+        if dus is not None:
+            _, dus_ops = dus
+            if len(dus_ops) >= 2:
+                write_bytes = self._bytes_of(dus_ops[1])
+                tgt = dus_ops[0]
+                for _ in range(8):   # trace aliased target through casts
+                    if tgt in param_idx:
+                        if param_idx[tgt] in op_bytes:
+                            op_bytes[param_idx[tgt]] = 0
+                        break
+                    opc, ops = producer.get(tgt, ("", []))
+                    if opc in self._CAST_OPS and ops:
+                        tgt = ops[0]
+                    else:
+                        break
+        return float(sum(op_bytes.values()) + write_bytes)
+
+    def comp_flops(self, comp: str) -> tuple[float, float]:
+        """(dense flops, dot count) of a computation incl. nested fusions
+        and calls — used for fusion bodies where only compute counts."""
+        if comp in self._flops_cache:
+            return self._flops_cache[comp]
+        self._flops_cache[comp] = (0.0, 0.0)
+        fl = dots = 0.0
+        for name, rest in self.computations.get(comp, []):
+            _, opcode, tail = _split_type_op(rest)
+            if opcode == "fusion":
+                cm = _CALLS.search(rest)
+                if cm:
+                    f2, d2 = self.comp_flops(cm.group(1))
+                    fl += f2
+                    dots += d2
+                continue
+            if opcode == "call":
+                cm = _TO.search(rest)
+                if cm:
+                    f2, d2 = self.comp_flops(cm.group(1))
+                    fl += f2
+                    dots += d2
+                continue
+            st = self._instr_stats(name, rest)
+            fl += st["flops"]
+            dots += st["dots"]
+        self._flops_cache[comp] = (fl, dots)
+        return fl, dots
+
+    def _instr_stats(self, name: str, rest: str) -> dict:
+        out = {"flops": 0.0, "hbm_bytes": 0.0, "link_bytes": 0.0,
+               "coll": {}, "coll_count": {}, "dots": 0,
+               "unknown_trip": 0}
+        res_seg, opcode, tail = _split_type_op(rest)
+        _, res_bytes = _shape_elems_bytes(res_seg)
+        args_head = self._args_head(tail)
+
+        if opcode in ("dot", "convolution"):
+            res_elems, _ = _shape_elems_bytes(res_seg)
+            k = 1.0
+            cm = _CONTRACT.search(rest)
+            ops = _OPERANDS.findall(args_head)
+            if cm and ops:
+                lhs_seg = self.shapes.get(ops[0], "")
+                sm = _SHAPE.search(lhs_seg)
+                if sm:
+                    dims = [int(d) for d in sm.group(2).split(",") if d]
+                    for idx in cm.group(1).split(","):
+                        if idx and int(idx) < len(dims):
+                            k *= dims[int(idx)]
+            out["flops"] = 2.0 * res_elems * k
+            out["dots"] = 1
+
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if base in _COLLECTIVES:
+            payload = res_bytes
+            if opcode.endswith("-start"):
+                # result is a (operand, result, ...) context tuple — take
+                # the destination buffer (2nd shape) when present
+                shapes = _SHAPE.findall(res_seg)
+                if len(shapes) >= 2:
+                    dt, dims = shapes[1]
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    payload = n * DTYPE_BYTES[dt]
+            link = payload
+            if base == "all-reduce":
+                link = 2.0 * payload
+            elif base == "reduce-scatter":
+                ops = _OPERANDS.findall(args_head)
+                if ops:
+                    _, ob = _shape_elems_bytes(self.shapes.get(ops[0], ""))
+                    payload = link = ob
+            out["coll"][base] = payload
+            out["coll_count"][base] = 1
+            out["link_bytes"] = link
+
+        if opcode == "dynamic-update-slice":
+            ops = _OPERANDS.findall(args_head)
+            upd = self._bytes_of(ops[1]) if len(ops) >= 2 else res_bytes
+            out["hbm_bytes"] = 2.0 * upd      # read slice + in-place write
+        elif opcode == "scatter":
+            # (target, indices, updates): in-place on target — traffic is
+            # indices + 2×updates (read + scattered writes)
+            ops = _OPERANDS.findall(args_head)
+            idx_b = self._bytes_of(ops[1]) if len(ops) >= 2 else 0
+            upd_b = self._bytes_of(ops[2]) if len(ops) >= 3 else res_bytes
+            out["hbm_bytes"] = float(idx_b + 2.0 * upd_b)
+        elif opcode in ("dynamic-slice", "slice", "gather"):
+            out["hbm_bytes"] = 2.0 * res_bytes
+        elif opcode and opcode not in _FREE_OPS:
+            op_bytes = 0
+            for op_name in _OPERANDS.findall(args_head):
+                _, ob = _shape_elems_bytes(self.shapes.get(op_name, ""))
+                op_bytes += ob
+            out["hbm_bytes"] = float(op_bytes + res_bytes)
+        return out
+
+    def _merge(self, a: dict, b: dict, mult: float = 1.0):
+        a["flops"] += b["flops"] * mult
+        a["hbm_bytes"] += b["hbm_bytes"] * mult
+        a["link_bytes"] += b["link_bytes"] * mult
+        a["dots"] += b["dots"] * mult
+        a["unknown_trip"] += b["unknown_trip"]
+        for k, v in b["coll"].items():
+            a["coll"][k] = a["coll"].get(k, 0.0) + v * mult
+        for k, v in b["coll_count"].items():
+            a["coll_count"][k] = a["coll_count"].get(k, 0) + v * mult
+
+    def comp_stats(self, comp: str) -> dict:
+        if comp in self._cache:
+            return self._cache[comp]
+        total = {"flops": 0.0, "hbm_bytes": 0.0, "link_bytes": 0.0,
+                 "coll": {}, "coll_count": {}, "dots": 0,
+                 "unknown_trip": 0}
+        # placeholder against recursion
+        self._cache[comp] = total
+        for name, rest in self.computations.get(comp, []):
+            _, opcode, _tail = _split_type_op(rest)
+            if opcode == "while":
+                cb = _COND_BODY.search(rest)
+                tm = _TRIP.search(rest)
+                trips = int(tm.group(1)) if tm else 1
+                if not tm:
+                    total["unknown_trip"] += 1
+                if cb:
+                    self._merge(total, self.comp_stats(cb.group(2)), trips)
+                    self._merge(total, self.comp_stats(cb.group(1)), trips)
+                continue
+            if opcode == "fusion":
+                cm = _CALLS.search(rest)
+                res_seg, _, tail = _split_type_op(rest)
+                if cm:
+                    fl, dots = self.comp_flops(cm.group(1))
+                    hbm = self._fusion_hbm(cm.group(1),
+                                           self._args_head(tail), res_seg)
+                    self._merge(total, {"flops": fl, "dots": dots,
+                                        "hbm_bytes": hbm, "link_bytes": 0.0,
+                                        "coll": {}, "coll_count": {},
+                                        "unknown_trip": 0})
+                continue
+            if opcode == "call":
+                cm = _TO.search(rest)
+                if cm:
+                    self._merge(total, self.comp_stats(cm.group(1)))
+                continue
+            if opcode == "conditional":
+                bm = _BRANCHES.search(rest)
+                if bm:
+                    branches = _OPERANDS.findall(bm.group(1))
+                    if branches:
+                        stats = [self.comp_stats(b) for b in branches]
+                        best = max(stats, key=lambda s: s["flops"]
+                                   + s["hbm_bytes"])
+                        self._merge(total, best)
+                continue
+            self._merge(total, self._instr_stats(name, rest))
+        self._cache[comp] = total
+        return total
+
+    def module_stats(self) -> dict:
+        assert self.entry, "no ENTRY computation found"
+        s = dict(self.comp_stats(self.entry))
+        s["collective_bytes"] = sum(s["coll"].values())
+        return s
+
+
+def analyze_hlo(text: str) -> dict[str, Any]:
+    return HloModule(text).module_stats()

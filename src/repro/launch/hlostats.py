@@ -1,0 +1,95 @@
+"""Extract roofline inputs from a compiled XLA executable.
+
+* ``cost_analysis()`` → HLO FLOPs + bytes accessed (per-device module).
+* Collective bytes are NOT in cost_analysis: we parse the *optimized*
+  (post-SPMD) HLO text and sum result-shape bytes of every
+  all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute instruction. For async pairs (``-start``/``-done``)
+  only the ``-start`` is counted. This approximates per-chip link bytes
+  (ring algorithms move ~(n−1)/n · payload; we report raw payload and
+  note the convention in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_COLL = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+         "collective-permute")
+_SHAPE_RE = re.compile(r"\b(" + "|".join(DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+(" + "|".join(_COLL) + r")(-start)?\(")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict[str, Any]:
+    """Sum collective payload bytes by op kind from optimized HLO."""
+    by_kind: dict[str, int] = {k: 0 for k in _COLL}
+    counts: dict[str, int] = {k: 0 for k in _COLL}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:            # async completion — already counted
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # result type segment: between '=' and the opcode token
+        eq = line.index("=")
+        seg = line[eq:m.start(1)]
+        by_kind[kind] += _shape_bytes(seg)
+        counts[kind] += 1
+    total = sum(by_kind.values())
+    return {"collective_bytes": total, "by_kind": by_kind, "counts": counts}
+
+
+def cost_stats(compiled) -> dict[str, Any]:
+    """Flatten compiled.cost_analysis() to the fields we use."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:                      # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    out = {}
+    for key in ("flops", "bytes accessed", "transcendentals",
+                "optimal_seconds"):
+        if key in ca:
+            out[key.replace(" ", "_")] = float(ca[key])
+    # per-memory-space byte counts when present
+    for k, v in ca.items():
+        if isinstance(k, str) and k.startswith("bytes accessed"):
+            out[k.replace(" ", "_")] = float(v)
+    return out
+
+
+def memory_stats(compiled) -> dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:                      # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        if hasattr(ma, attr):
+            out[attr] = int(getattr(ma, attr))
+    return out

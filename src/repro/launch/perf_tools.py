@@ -1,0 +1,97 @@
+"""Perf-iteration tooling: attribute collective/HBM bytes to model code.
+
+Every optimized-HLO instruction carries ``metadata={op_name="jit(step)/
+.../<jax label>"}``; grouping the loop-aware analyzer's per-instruction
+costs by a coarsened op_name answers "WHICH einsum / which layer op is
+generating this traffic" — the profile the hypothesis loop works from.
+
+    PYTHONPATH=src python -m repro.launch.perf_tools \
+        experiments/dryrun/<cell>.hlo.txt --top 20
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+from collections import defaultdict
+
+from repro.launch.hlo_analysis import (HloModule, _COND_BODY, _TRIP,
+                                       _CALLS, _split_type_op)
+
+_META = re.compile(r'op_name="([^"]*)"')
+
+
+def _label(rest: str) -> str:
+    m = _META.search(rest)
+    if not m:
+        return "<no-metadata>"
+    name = m.group(1)
+    # keep the last two informative segments
+    parts = [p for p in name.split("/") if p and not p.startswith("jit(")]
+    return "/".join(parts[-2:]) if parts else name
+
+
+def breakdown(text: str):
+    """{label: {flops, hbm_bytes, link_bytes, count}} with loop trips."""
+    mod = HloModule(text)
+    acc: dict = defaultdict(lambda: dict(flops=0.0, hbm=0.0, link=0.0,
+                                         n=0.0))
+
+    def walk(comp: str, mult: float):
+        for name, rest in mod.computations.get(comp, []):
+            res_seg, opcode, tail = _split_type_op(rest)
+            if opcode == "while":
+                cb = _COND_BODY.search(rest)
+                tm = _TRIP.search(rest)
+                trips = int(tm.group(1)) if tm else 1
+                if cb:
+                    walk(cb.group(2), mult * trips)
+                    walk(cb.group(1), mult * trips)
+                continue
+            if opcode == "fusion":
+                cm = _CALLS.search(rest)
+                lbl = _label(rest)
+                if cm:
+                    fl, _ = mod.comp_flops(cm.group(1))
+                    hbm = mod._fusion_hbm(cm.group(1),
+                                          mod._args_head(tail), res_seg)
+                    acc[lbl]["flops"] += fl * mult
+                    acc[lbl]["hbm"] += hbm * mult
+                    acc[lbl]["n"] += mult
+                continue
+            st = mod._instr_stats(name, rest)
+            if st["flops"] or st["hbm_bytes"] or st["link_bytes"]:
+                lbl = f"{opcode}:{_label(rest)}"
+                acc[lbl]["flops"] += st["flops"] * mult
+                acc[lbl]["hbm"] += st["hbm_bytes"] * mult
+                acc[lbl]["link"] += st["link_bytes"] * mult
+                acc[lbl]["n"] += mult
+
+    assert mod.entry
+    walk(mod.entry, 1.0)
+    return dict(acc)
+
+
+def report(text: str, *, top: int = 20, sort: str = "link"):
+    rows = sorted(breakdown(text).items(),
+                  key=lambda kv: kv[1][sort], reverse=True)
+    print(f"{'LABEL':70s} {'count':>7s} {'flops':>10s} {'hbm':>10s} "
+          f"{'link':>10s}")
+    for lbl, v in rows[:top]:
+        print(f"{lbl[:70]:70s} {v['n']:7.0f} {v['flops']:10.2e} "
+              f"{v['hbm']:10.2e} {v['link']:10.2e}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo_path")
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--sort", default="link", choices=["link", "hbm",
+                                                       "flops"])
+    args = ap.parse_args()
+    with open(args.hlo_path) as f:
+        report(f.read(), top=args.top, sort=args.sort)
+
+
+if __name__ == "__main__":
+    main()

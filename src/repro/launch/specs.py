@@ -1,0 +1,103 @@
+"""Assigned input shapes → ShapeDtypeStruct stand-ins (no allocation).
+
+The four assigned shapes (each arch × each shape = one dry-run cell):
+    train_4k     seq 4096   gbs 256  → train_step
+    prefill_32k  seq 32768  gbs 32   → serve_prefill
+    decode_32k   seq 32768  gbs 128  → serve_step (1 token, full cache)
+    long_500k    seq 524288 gbs 1    → serve_step (SSM/hybrid only)
+
+Skips are family-driven (DESIGN.md §5): long_500k needs sub-quadratic
+mixing — only mamba2-1.3b and recurrentgemma-9b run it.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_module
+from repro.models import EncDecConfig, init_cache
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def cell_supported(arch: str, shape: str) -> tuple[bool, str]:
+    meta = get_module(arch).ARCH
+    if shape == "long_500k" and not meta["long_500k"]:
+        return False, "quadratic attention — long_500k N/A (DESIGN.md §5)"
+    if shape.startswith("decode") and not meta.get("decode", True):
+        return False, "encoder-only arch has no decode step"
+    return True, ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg, shape_name: str) -> dict[str, Any]:
+    """ShapeDtypeStruct tree for the given entry point.
+
+    train/prefill → batch dict; decode → {"cache": …, "tokens": …}.
+    """
+    info = SHAPES[shape_name]
+    B, S, kind = info["batch"], info["seq"], info["kind"]
+    cd = cfg.compute_dtype
+
+    if isinstance(cfg, EncDecConfig):
+        if kind in ("train", "prefill"):
+            batch = {"frame_embeds": sds((B, cfg.n_frames, cfg.d_model), cd),
+                     "tokens": sds((B, S), "int32")}
+            if kind == "train":
+                batch["labels"] = sds((B, S), "int32")
+            return batch
+        cache = jax.eval_shape(
+            functools.partial(init_cache, cfg, B, S))
+        return {"cache": cache, "tokens": sds((B, 1), "int32")}
+
+    is_vlm = getattr(cfg, "frontend", None) == "vision"
+    if kind in ("train", "prefill"):
+        s_text = S - (cfg.n_img_tokens if is_vlm else 0)
+        batch = {"tokens": sds((B, s_text), "int32")}
+        if kind == "train":
+            batch["labels"] = sds((B, s_text), "int32")
+        if is_vlm:
+            batch["image_embeds"] = sds(
+                (B, cfg.n_img_tokens, cfg.d_frontend), cd)
+        return batch
+    cache = jax.eval_shape(functools.partial(init_cache, cfg, B, S))
+    return {"cache": cache, "tokens": sds((B, 1), "int32")}
+
+
+def param_count(cfg) -> int:
+    """Exact parameter count via eval_shape (no allocation)."""
+    from repro.models import init_model
+    from repro.common.pytree import tree_count
+    tree = jax.eval_shape(
+        lambda: init_model(jax.random.PRNGKey(0), cfg))
+    return tree_count(tree)
+
+
+def active_param_count(cfg) -> int:
+    """MoE-aware active parameters (MODEL_FLOPS uses 6·N_active·D)."""
+    from repro.models import init_model
+    from repro.common.pytree import flatten_with_paths
+    tree = jax.eval_shape(
+        lambda: init_model(jax.random.PRNGKey(0), cfg))
+    total = 0
+    is_moe = getattr(cfg, "mlp_type", "") == "moe"
+    frac = (cfg.top_k / cfg.n_experts) if is_moe else 1.0
+    for path, leaf in flatten_with_paths(tree):
+        n = int(np.prod(leaf.shape))
+        if is_moe and leaf.ndim == 4 and "mlp/" in path:
+            n = int(n * frac)
+        total += n
+    return total

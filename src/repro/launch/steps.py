@@ -1,0 +1,126 @@
+"""Jit-able step functions + their sharding trees.
+
+``make_train_setup`` returns everything the trainer and the dry-run need:
+state ShapeDtypeStructs, NamedShardings, and the train_step/serve fns.
+State layout: {"params", "adapters", "opt_state", "step"} — in PEFT mode
+(the paper's) gradients/optimizer touch only the adapter tree; base
+params flow through untouched (and donated, so they are never copied).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.peft import init_adapters
+from repro.core.transforms import PEFTConfig
+from repro.models import decode_step as model_decode
+from repro.models import init_model, prefill as model_prefill, train_loss
+from repro.optim import GradientTransformation, apply_updates
+from repro.parallel.sharding import (batch_specs, cache_specs, param_specs,
+                                     spec_for_batch, to_shardings)
+
+Params = dict[str, Any]
+
+
+def make_train_step(cfg, peft: Optional[PEFTConfig],
+                    opt: GradientTransformation, *, full_finetune=False):
+    """(state, batch) → (state, metrics); grads w.r.t. adapters (PEFT)
+    or base params (full finetune baseline)."""
+
+    def step(state, batch):
+        params, adapters = state["params"], state["adapters"]
+
+        if full_finetune:
+            def loss_fn(p):
+                return train_loss(p, adapters, batch, cfg, peft)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            updates, opt_state = opt.update(grads, state["opt_state"], params)
+            new_params, new_adapters = apply_updates(params, updates), adapters
+        else:
+            def loss_fn(a):
+                return train_loss(params, a, batch, cfg, peft)
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(adapters)
+            updates, opt_state = opt.update(grads, state["opt_state"],
+                                            adapters)
+            new_params = params
+            new_adapters = apply_updates(adapters, updates)
+
+        metrics = dict(metrics)
+        metrics["grad_norm"] = _global_norm(grads)
+        new_state = {"params": new_params, "adapters": new_adapters,
+                     "opt_state": opt_state, "step": state["step"] + 1}
+        return new_state, metrics
+
+    return step
+
+
+def _global_norm(tree):
+    from repro.optim import global_norm
+    return global_norm(tree)
+
+
+def make_serve_fns(cfg, peft: Optional[PEFTConfig]):
+    def serve_prefill(params, adapters, batch):
+        return model_prefill(params, adapters, batch, cfg, peft)
+
+    def serve_step(params, adapters, cache, tokens):
+        return model_decode(params, adapters, cache, tokens, cfg, peft)
+
+    return serve_prefill, serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract state + shardings (used by trainer init and the dry-run)
+# ---------------------------------------------------------------------------
+
+def abstract_state(cfg, peft: Optional[PEFTConfig],
+                   opt: GradientTransformation, *, full_finetune=False):
+    """ShapeDtypeStruct tree of the full train state — no allocation."""
+    params = jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+    adapters = (jax.eval_shape(
+        lambda: init_adapters(jax.random.PRNGKey(1), params, peft))
+        if peft is not None else {})
+    trainable = params if full_finetune else adapters
+    opt_state = jax.eval_shape(opt.init, trainable)
+    return {"params": params, "adapters": adapters, "opt_state": opt_state,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def state_shardings(state_sds, mesh, *, serve: bool = False):
+    """NamedShardings for the whole state tree (param rules everywhere —
+    optimizer moments share their parameter's layout by path suffix).
+    serve=True switches weights to TP-only layout (§Perf D)."""
+    specs = param_specs(state_sds, mesh, serve=serve)
+    return to_shardings(specs, mesh)
+
+
+def batch_shardings(batch_sds, mesh):
+    return to_shardings(batch_specs(batch_sds, mesh), mesh)
+
+
+def serve_shardings(serve_sds, mesh):
+    """For {"cache": …, "tokens": …} decode inputs."""
+    out = {}
+    if "cache" in serve_sds:
+        out["cache"] = to_shardings(cache_specs(serve_sds["cache"], mesh),
+                                    mesh)
+    out["tokens"] = to_shardings(batch_specs(serve_sds["tokens"], mesh),
+                                 mesh)
+    return out
+
+
+def init_state(rng, cfg, peft, opt, *, full_finetune=False):
+    """Concrete state init (small models / on-mesh with jit+shardings)."""
+    params = init_model(rng, cfg)
+    adapters = (init_adapters(jax.random.fold_in(rng, 1), params, peft)
+                if peft is not None else {})
+    trainable = params if full_finetune else adapters
+    return {"params": params, "adapters": adapters,
+            "opt_state": opt.init(trainable),
+            "step": jnp.zeros((), jnp.int32)}

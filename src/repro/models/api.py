@@ -1,0 +1,173 @@
+"""Uniform model API over the whole zoo — the launcher, dry-run, tests
+and benchmarks all go through these four entry points:
+
+    init_model(rng, cfg)                      → params
+    train_loss(params, adapters, batch, ...)  → (loss, metrics)
+    prefill(params, adapters, batch, ...)     → (cache, last_logits)
+    decode_step(params, adapters, cache, ...) → (logits, new_cache)
+
+``cfg`` is a ModelConfig (decoder-only families) or EncDecConfig
+(whisper); batches are dicts of arrays (see repro/launch/specs.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.transforms import PEFTConfig
+from repro.models import backbone, encdec
+from repro.models.backbone import ModelConfig
+from repro.models.encdec import EncDecConfig
+
+Params = dict[str, Any]
+
+AUX_LOSS_W = 0.01
+ROUTER_Z_W = 0.001
+
+
+def init_model(rng: jax.Array, cfg) -> Params:
+    if isinstance(cfg, EncDecConfig):
+        return encdec.init(rng, cfg)
+    return backbone.init(rng, cfg)
+
+
+def init_cache(cfg, batch: int, max_len: int) -> Params:
+    if isinstance(cfg, EncDecConfig):
+        return encdec.init_cache(cfg, batch, max_len)
+    return backbone.init_cache(cfg, batch, max_len)
+
+
+def train_loss(params: Params, adapters: Optional[Params], batch: dict,
+               cfg, peft: Optional[PEFTConfig]):
+    """Next-token CE (+ MoE aux losses). Returns (loss, metrics)."""
+    if isinstance(cfg, EncDecConfig):
+        enc_out = encdec.encode(params, cfg, batch["frame_embeds"],
+                                adapters=adapters, peft=peft)
+        hidden, _ = encdec.decode(params, cfg, batch["tokens"],
+                                  enc_out=enc_out, adapters=adapters,
+                                  peft=peft, mode="train")
+        loss = _chunked_ce_encdec(params, cfg, hidden, batch["labels"],
+                                  batch.get("mask"))
+        return loss, {"loss": loss}
+
+    hidden, _, aux = backbone.forward(
+        params, cfg, tokens=batch["tokens"], adapters=adapters, peft=peft,
+        mode="train", image_embeds=batch.get("image_embeds"))
+    if cfg.frontend == "vision" and batch.get("image_embeds") is not None:
+        hidden = hidden[:, batch["image_embeds"].shape[1]:]
+    loss = backbone.lm_loss(params, cfg, hidden, batch["labels"],
+                            batch.get("mask"))
+    metrics = {"loss": loss}
+    total = loss
+    if cfg.mlp_type == "moe":
+        total = total + AUX_LOSS_W * aux["aux_loss"] \
+            + ROUTER_Z_W * aux["router_z"]
+        metrics.update({"moe_aux": aux["aux_loss"],
+                        "router_z": aux["router_z"]})
+    return total, metrics
+
+
+def _chunked_ce_encdec(params, cfg, hidden, labels, mask):
+    logits = encdec.logits_fn(params, hidden)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    m = (jnp.ones(labels.shape, jnp.float32) if mask is None
+         else mask.astype(jnp.float32))
+    return jnp.sum((logz - gold) * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def prefill(params: Params, adapters: Optional[Params], batch: dict, cfg,
+            peft: Optional[PEFTConfig]):
+    """Build serving caches from a full prompt; returns (cache,
+    last-position logits) — the serve_prefill entry the dry-run lowers."""
+    if isinstance(cfg, EncDecConfig):
+        enc_out = encdec.encode(params, cfg, batch["frame_embeds"],
+                                adapters=adapters, peft=peft)
+        hidden, cache = encdec.decode(params, cfg, batch["tokens"],
+                                      enc_out=enc_out, adapters=adapters,
+                                      peft=peft, mode="prefill")
+        logits = encdec.logits_fn(params, hidden[:, -1:])
+        return cache, logits
+
+    hidden, cache, _ = backbone.forward(
+        params, cfg, tokens=batch["tokens"], adapters=adapters, peft=peft,
+        mode="prefill", image_embeds=batch.get("image_embeds"))
+    logits = backbone.logits_fn(params, cfg, hidden[:, -1:])
+    return cache, logits
+
+
+def pad_cache(cache: Params, cfg, max_len: int) -> Params:
+    """Grow prefill-sized KV caches to ``max_len`` so decode can append.
+
+    Full-attention k/v are zero-padded on the time axis. Sliding-window
+    layers are converted to ring-buffer layout (slot = pos % window) of
+    exactly ``window`` slots. SSM/RG-LRU states are fixed-size already.
+    """
+    window = getattr(cfg, "window", None)
+
+    from repro.common.pytree import map_with_paths
+
+    def fix(path, leaf):
+        base = path.rsplit("/", 1)[-1]
+        if base not in ("k", "v") or leaf.ndim < 4:
+            return leaf
+        t_axis = leaf.ndim - 2
+        t = leaf.shape[t_axis]
+        if "cross" in path.split("/"):
+            return leaf                          # encoder-length, fixed
+        if window is not None and _is_window_cache(path, cfg):
+            w = window
+            p = min(t, w)
+            sl = [slice(None)] * leaf.ndim
+            sl[t_axis] = slice(t - p, t)
+            recent = leaf[tuple(sl)]             # last p entries
+            slots = jnp.arange(t - p, t) % w     # ring slot per abs pos
+            out = jnp.zeros(leaf.shape[:t_axis] + (w,)
+                            + leaf.shape[t_axis + 1:], leaf.dtype)
+            return out.at[..., slots, :].set(recent)
+        if t >= max_len:
+            return leaf
+        pad = [(0, 0)] * leaf.ndim
+        pad[t_axis] = (0, max_len - t)
+        return jnp.pad(leaf, pad)
+
+    return map_with_paths(fix, cache)
+
+
+def _is_window_cache(path: str, cfg) -> bool:
+    """Which pattern position a cache leaf belongs to decides its block
+    type (pos{j}/rem{j}/layer{i} keys encode the position)."""
+    import re
+    if isinstance(cfg, EncDecConfig) or cfg.window is None:
+        return False
+    m = re.search(r"pos(\d+)", path)
+    if m:
+        return cfg.block_pattern[int(m.group(1))] == "local_attn"
+    m = re.search(r"rem(\d+)", path)
+    if m:
+        return cfg.remainder[int(m.group(1))] == "local_attn"
+    m = re.search(r"layer(\d+)", path)
+    if m:
+        pat = cfg.block_pattern
+        return pat[int(m.group(1)) % len(pat)] == "local_attn"
+    return False
+
+
+def decode_step(params: Params, adapters: Optional[Params], cache: Params,
+                tokens: jax.Array, cfg, peft: Optional[PEFTConfig]):
+    """One serving step: (B,1) new tokens against the cache — the
+    serve_step entry the decode_32k / long_500k cells lower."""
+    if isinstance(cfg, EncDecConfig):
+        hidden, new_cache = encdec.decode(params, cfg, tokens, cache=cache,
+                                          adapters=adapters, peft=peft,
+                                          mode="decode")
+        return encdec.logits_fn(params, hidden), new_cache
+
+    hidden, new_cache, _ = backbone.forward(
+        params, cfg, tokens=tokens, adapters=adapters, peft=peft,
+        mode="decode", cache=cache)
+    return backbone.logits_fn(params, cfg, hidden), new_cache

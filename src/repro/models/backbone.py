@@ -1,0 +1,433 @@
+"""Unified decoder-only LM backbone.
+
+One config-driven implementation covers the dense / MoE / SSM / hybrid
+families: each layer's temporal mixer is chosen by ``block_pattern``
+("attn" | "local_attn" | "ssd" | "rglru") and its MLP by ``mlp_type``
+("swiglu" | "gelu" | "moe" | "none").  Layers are scanned in *pattern
+units* (e.g. RecurrentGemma's (rglru, rglru, local_attn)) so the HLO is
+O(1) in depth — essential for 512-device dry-run compiles — with the
+remainder layers (n_layers % len(pattern)) applied unscanned.
+
+Entry points: ``init``, ``forward`` (mode: train | prefill | decode),
+``lm_loss`` (chunked cross-entropy so (B,S,vocab) logits never fully
+materialize).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.peft import get_adapter
+from repro.models import layers as L
+from repro.models.attention import apply_attention, init_attention
+from repro.models.moe import init_moe, moe_mlp
+from repro.models.rglru import init_rglru_block, rglru_block
+from repro.models.ssm import init_mamba2, mamba2_block, ssm_dims
+from repro.parallel.context import shard_hidden
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv: int = 4
+    d_ff: int = 1024
+    vocab: int = 1024
+    head_dim: int = 0                      # 0 → d_model // n_heads
+    block_pattern: tuple[str, ...] = ("attn",)
+    mlp_type: str = "swiglu"               # swiglu | gelu | moe | none
+    act: str = "silu"
+    qkv_bias: bool = False
+    rope_theta: Optional[float] = 10000.0
+    norm: str = "rmsnorm"
+    window: Optional[int] = None           # local_attn sliding window
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # SSM (mamba2)
+    ssm_headdim: int = 64
+    ssm_state: int = 128
+    ssm_expand: int = 2
+    ssm_groups: int = 1
+    ssm_chunk: int = 256
+    # RG-LRU
+    rnn_width: int = 0                     # 0 → d_model
+    rnn_heads: int = 0                     # 0 → n_heads
+    # frontends (stub — see DESIGN.md §5)
+    frontend: Optional[str] = None         # "vision" | None
+    n_img_tokens: int = 0
+    d_frontend: int = 1024
+    # misc
+    tie_embeddings: bool = True
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: str = "full"                    # full | none
+    q_chunk: int = 512
+    loss_chunk: int = 0                    # 0 = unchunked CE
+    scan_layers: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def d_rnn(self) -> int:
+        return self.rnn_width or self.d_model
+
+    @property
+    def n_rnn_heads(self) -> int:
+        return self.rnn_heads or self.n_heads
+
+    @property
+    def n_units(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def remainder(self) -> tuple[str, ...]:
+        rem = self.n_layers % len(self.block_pattern)
+        return self.block_pattern[:rem]
+
+    def pdt(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdt(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_mixer(rng, btype: str, cfg: ModelConfig) -> Params:
+    if btype in ("attn", "local_attn"):
+        return init_attention(rng, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                              cfg.hd, cfg.pdt(), qkv_bias=cfg.qkv_bias)
+    if btype == "ssd":
+        return init_mamba2(rng, cfg.d_model, cfg.pdt(),
+                           expand=cfg.ssm_expand, headdim=cfg.ssm_headdim,
+                           d_state=cfg.ssm_state, n_groups=cfg.ssm_groups)
+    if btype == "rglru":
+        return init_rglru_block(rng, cfg.d_model, cfg.d_rnn,
+                                cfg.n_rnn_heads, cfg.pdt())
+    raise ValueError(btype)
+
+
+def _init_mlp(rng, cfg: ModelConfig) -> Optional[Params]:
+    if cfg.mlp_type == "none":
+        return None
+    if cfg.mlp_type == "moe":
+        return init_moe(rng, cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.pdt())
+    if cfg.mlp_type == "swiglu":
+        return L.init_glu_mlp(rng, cfg.d_model, cfg.d_ff, cfg.pdt())
+    return L.init_mlp(rng, cfg.d_model, cfg.d_ff, cfg.pdt())
+
+
+def _init_layer(rng, btype: str, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(rng)
+    p: Params = {
+        "norm1": L.init_rmsnorm(cfg.d_model, cfg.pdt()),
+        "mixer": _init_mixer(k1, btype, cfg),
+    }
+    if cfg.mlp_type != "none":
+        p["norm2"] = L.init_rmsnorm(cfg.d_model, cfg.pdt())
+        p["mlp"] = _init_mlp(k2, cfg)
+    return p
+
+
+def init(rng: jax.Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(rng, 4 + len(cfg.block_pattern))
+    params: Params = {"embed": L.init_embedding(ks[0], cfg.vocab,
+                                                cfg.d_model, cfg.pdt()),
+                      "final_norm": L.init_rmsnorm(cfg.d_model, cfg.pdt())}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(ks[1], cfg.d_model, cfg.vocab,
+                                         cfg.pdt())
+    if cfg.frontend == "vision":
+        # 2-layer multimodal projector (LLaVA-style MLP connector)
+        params["mm_proj"] = {
+            "up_proj": L.init_dense(jax.random.fold_in(ks[2], 0),
+                                    cfg.d_frontend, cfg.d_model, cfg.pdt()),
+            "down_proj": L.init_dense(jax.random.fold_in(ks[2], 1),
+                                      cfg.d_model, cfg.d_model, cfg.pdt()),
+        }
+
+    units: Params = {}
+    if cfg.scan_layers and cfg.n_units > 0:
+        for j, btype in enumerate(cfg.block_pattern):
+            key = jax.random.fold_in(ks[3], j)
+            sub = jax.random.split(key, cfg.n_units)
+            stacked = jax.vmap(
+                functools.partial(_init_layer, btype=btype, cfg=cfg))(sub)
+            units[f"pos{j}"] = stacked
+    else:
+        for i in range(cfg.n_layers):
+            btype = cfg.block_pattern[i % len(cfg.block_pattern)]
+            units[f"layer{i}"] = _init_layer(
+                jax.random.fold_in(ks[3], 1000 + i), btype, cfg)
+    params["units"] = units
+    for j, btype in enumerate(cfg.remainder):
+        params[f"rem{j}"] = _init_layer(
+            jax.random.fold_in(ks[3], 500 + j), btype, cfg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Cache init (prefill/decode serving)
+# ---------------------------------------------------------------------------
+
+def _layer_cache_spec(btype: str, cfg: ModelConfig, batch: int,
+                      max_len: int):
+    cd = cfg.cdt()
+    if btype in ("attn", "local_attn"):
+        # sliding-window layers use a ring buffer of exactly `window` slots
+        # (O(window) HBM instead of O(S) — what makes hybrid long_500k cheap)
+        t = max_len if btype == "attn" else min(max_len, cfg.window or max_len)
+        return {"k": jnp.zeros((batch, cfg.n_kv, t, cfg.hd), cd),
+                "v": jnp.zeros((batch, cfg.n_kv, t, cfg.hd), cd)}
+    if btype == "ssd":
+        dims = ssm_dims(cfg.d_model, expand=cfg.ssm_expand,
+                        headdim=cfg.ssm_headdim, d_state=cfg.ssm_state,
+                        n_groups=cfg.ssm_groups)
+        conv_ch = dims["d_inner"] + 2 * dims["n_groups"] * dims["d_state"]
+        return {"conv": jnp.zeros((batch, dims["conv_width"] - 1, conv_ch),
+                                  cd),
+                "ssm": jnp.zeros((batch, dims["n_heads"], dims["d_state"],
+                                  dims["headdim"]), jnp.float32)}
+    if btype == "rglru":
+        return {"conv": jnp.zeros((batch, 3, cfg.d_rnn), cd),
+                "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32)}
+    raise ValueError(btype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    """Preallocated serving cache for the whole stack."""
+    cache: Params = {"cursor": jnp.zeros((), jnp.int32)}
+    if cfg.scan_layers and cfg.n_units > 0:
+        for j, btype in enumerate(cfg.block_pattern):
+            one = _layer_cache_spec(btype, cfg, batch, max_len)
+            cache[f"pos{j}"] = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (cfg.n_units, *x.shape)).copy(), one)
+    else:
+        for i in range(cfg.n_layers):
+            btype = cfg.block_pattern[i % len(cfg.block_pattern)]
+            cache[f"layer{i}"] = _layer_cache_spec(btype, cfg, batch, max_len)
+    for j, btype in enumerate(cfg.remainder):
+        cache[f"rem{j}"] = _layer_cache_spec(btype, cfg, batch, max_len)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _apply_layer(p: Params, x: jax.Array, btype: str, cfg: ModelConfig, *,
+                 positions, cache=None, cache_pos=None, adapters=None,
+                 peft=None, keep_cache=True):
+    """Pre-norm residual block: mixer + optional MLP. Returns
+    (x, new_cache, aux). keep_cache=False (train mode) discards mixer
+    state so scan does not stack full-depth KV tensors."""
+    h = L.rmsnorm(p["norm1"], x)
+    a_mixer = get_adapter(adapters, "mixer")
+    if btype in ("attn", "local_attn"):
+        window = cfg.window if btype == "local_attn" else None
+        mixed, new_cache = apply_attention(
+            p["mixer"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+            positions=positions, causal=True, window=window,
+            rope_theta=cfg.rope_theta, cache=cache, cache_pos=cache_pos,
+            q_chunk=cfg.q_chunk, adapters=a_mixer, peft=peft)
+    elif btype == "ssd":
+        mixed, new_cache = mamba2_block(
+            p["mixer"], h, d_model=cfg.d_model, cache=cache,
+            chunk=cfg.ssm_chunk, adapters=a_mixer, peft=peft,
+            expand=cfg.ssm_expand, headdim=cfg.ssm_headdim,
+            d_state=cfg.ssm_state, n_groups=cfg.ssm_groups)
+    elif btype == "rglru":
+        mixed, new_cache = rglru_block(
+            p["mixer"], h, d_rnn=cfg.d_rnn, n_heads=cfg.n_rnn_heads,
+            cache=cache, adapters=a_mixer, peft=peft)
+    else:
+        raise ValueError(btype)
+    x = x + mixed
+    if not keep_cache:
+        new_cache = {}
+
+    aux = {"aux_loss": jnp.zeros((), jnp.float32),
+           "router_z": jnp.zeros((), jnp.float32)}
+    if cfg.mlp_type != "none":
+        h2 = L.rmsnorm(p["norm2"], x)
+        a_mlp = get_adapter(adapters, "mlp")
+        if cfg.mlp_type == "moe":
+            out, moe_aux = moe_mlp(p["mlp"], h2, top_k=cfg.top_k,
+                                   n_experts=cfg.n_experts,
+                                   capacity_factor=cfg.capacity_factor,
+                                   act=cfg.act, adapters=a_mlp, peft=peft)
+            aux = {"aux_loss": moe_aux["aux_loss"],
+                   "router_z": moe_aux["router_z"]}
+        elif cfg.mlp_type == "swiglu":
+            out = L.glu_mlp(p["mlp"], h2, cfg.act, adapters=a_mlp, peft=peft)
+        else:
+            out = L.mlp(p["mlp"], h2, cfg.act, adapters=a_mlp, peft=peft)
+        x = x + out
+    return x, new_cache, aux
+
+
+def forward(params: Params, cfg: ModelConfig, *, tokens=None,
+            inputs_embeds=None, adapters=None, peft=None, mode="train",
+            cache=None, image_embeds=None):
+    """Run the backbone.
+
+    mode='train'/'prefill': full-sequence; prefill returns caches.
+    mode='decode': tokens (B,1) against ``cache`` (advances cache['pos']).
+    Returns (hidden (B,S,d), new_cache, aux).
+    """
+    cd = cfg.cdt()
+    if inputs_embeds is None:
+        x = L.embed(params["embed"], tokens, cd)
+    else:
+        x = inputs_embeds.astype(cd)
+    if cfg.frontend == "vision" and image_embeds is not None:
+        img = L.mlp(params["mm_proj"], image_embeds.astype(cd), "gelu")
+        x = jnp.concatenate([img, x], axis=1)
+    x = shard_hidden(x)
+
+    B, S = x.shape[:2]
+    if mode == "decode":
+        assert cache is not None
+        pos0 = cache["cursor"]
+        positions = jnp.broadcast_to(pos0[None, None], (B, S)).astype(jnp.int32)
+        cache_pos = pos0
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        cache_pos = None
+
+    aux_sum = {"aux_loss": jnp.zeros((), jnp.float32),
+               "router_z": jnp.zeros((), jnp.float32)}
+    new_cache: Params = {}
+    pattern = cfg.block_pattern
+
+    keep_cache = mode != "train"
+
+    if cfg.scan_layers and cfg.n_units > 0:
+        def unit_body(carry_x, xs):
+            unit_params, unit_adapters, unit_caches = xs
+            cx = carry_x
+            caches_out = {}
+            aux_u = {"aux_loss": jnp.zeros((), jnp.float32),
+                     "router_z": jnp.zeros((), jnp.float32)}
+            for j, btype in enumerate(pattern):
+                lc = unit_caches.get(f"pos{j}") if unit_caches else None
+                cx, nc, aux = _apply_layer(
+                    unit_params[f"pos{j}"], cx, btype, cfg,
+                    positions=positions, cache=lc, cache_pos=cache_pos,
+                    adapters=get_adapter(unit_adapters, f"pos{j}")
+                    if unit_adapters else None,
+                    peft=peft, keep_cache=keep_cache)
+                caches_out[f"pos{j}"] = nc
+                aux_u = jax.tree_util.tree_map(jnp.add, aux_u, aux)
+            cx = shard_hidden(cx)   # keep scan carry sequence-sharded
+            return cx, (caches_out, aux_u)
+
+        body = unit_body
+        if cfg.remat == "full":
+            body = jax.checkpoint(unit_body, prevent_cse=False)
+        elif cfg.remat == "dots":
+            # §Perf B5: save matmul outputs — skips the bwd recompute of
+            # the FSDP weight-gathers + attention (costs HBM for the
+            # saved activations; measured in EXPERIMENTS §Perf).
+            body = jax.checkpoint(
+                unit_body, prevent_cse=False,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+        unit_params = {k: params["units"][k] for k in params["units"]}
+        unit_adapters = get_adapter(adapters, "units") if adapters else None
+        unit_caches = ({k: cache[k] for k in cache if k.startswith("pos")}
+                       if cache is not None else None)
+        xs = (unit_params, unit_adapters, unit_caches)
+        # scan requires every xs leaf to have leading n_units dim; params &
+        # adapters & caches are stacked that way by construction.
+        x, (scan_caches, aux_units) = jax.lax.scan(body, x, xs)
+        aux_sum = jax.tree_util.tree_map(
+            lambda a, b: a + jnp.sum(b), aux_sum, aux_units)
+        new_cache.update(scan_caches)
+    else:
+        for i in range(cfg.n_layers):
+            btype = pattern[i % len(pattern)]
+            lc = cache.get(f"layer{i}") if cache is not None else None
+            x, nc, aux = _apply_layer(
+                params["units"][f"layer{i}"], x, btype, cfg,
+                positions=positions, cache=lc, cache_pos=cache_pos,
+                adapters=get_adapter(adapters, "units", f"layer{i}"),
+                peft=peft, keep_cache=keep_cache)
+            new_cache[f"layer{i}"] = nc
+            aux_sum = jax.tree_util.tree_map(jnp.add, aux_sum, aux)
+
+    for j, btype in enumerate(cfg.remainder):
+        lc = cache.get(f"rem{j}") if cache is not None else None
+        x, nc, aux = _apply_layer(
+            params[f"rem{j}"], x, btype, cfg, positions=positions,
+            cache=lc, cache_pos=cache_pos,
+            adapters=get_adapter(adapters, f"rem{j}"), peft=peft,
+            keep_cache=keep_cache)
+        new_cache[f"rem{j}"] = nc
+        aux_sum = jax.tree_util.tree_map(jnp.add, aux_sum, aux)
+
+    x = L.rmsnorm(params["final_norm"], x)
+    if mode == "decode":
+        new_cache["cursor"] = cache["cursor"] + S
+    elif mode == "prefill":
+        new_cache["cursor"] = jnp.asarray(S, jnp.int32)
+    return x, new_cache, aux_sum
+
+
+def logits_fn(params: Params, cfg: ModelConfig, hidden: jax.Array):
+    if cfg.tie_embeddings:
+        return L.logits_out(params["embed"], hidden)
+    return jnp.einsum("...d,dv->...v", hidden.astype(jnp.float32),
+                      params["lm_head"]["kernel"].astype(jnp.float32))
+
+
+def lm_loss(params: Params, cfg: ModelConfig, hidden: jax.Array,
+            labels: jax.Array, mask: Optional[jax.Array] = None):
+    """Chunked cross-entropy: the (B,S,V) logits tensor only ever exists
+    (B,chunk,V) at a time (remat'd), which keeps 150k-vocab models inside
+    HBM at 1M-token batches."""
+    B, S, _ = hidden.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    mask = mask.astype(jnp.float32)
+
+    def ce(h, y, m):
+        logits = logits_fn(params, cfg, h)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * m), jnp.sum(m)
+
+    chunk = cfg.loss_chunk
+    if not chunk or S <= chunk:
+        tot, cnt = ce(hidden, labels, mask)
+        return tot / jnp.maximum(cnt, 1.0)
+
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    hp = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+    yp = jnp.pad(labels, ((0, 0), (0, pad)))
+    mp = jnp.pad(mask, ((0, 0), (0, pad)))
+    hs = hp.reshape(B, n, chunk, -1).transpose(1, 0, 2, 3)
+    ys = yp.reshape(B, n, chunk).transpose(1, 0, 2)
+    ms = mp.reshape(B, n, chunk).transpose(1, 0, 2)
+    ce_r = jax.checkpoint(ce)
+    tots, cnts = jax.lax.map(lambda args: ce_r(*args), (hs, ys, ms))
+    return jnp.sum(tots) / jnp.maximum(jnp.sum(cnts), 1.0)

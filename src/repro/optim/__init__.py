@@ -1,0 +1,27 @@
+from repro.optim.transforms import (
+    GradientTransformation,
+    adamw,
+    chain,
+    clip_by_global_norm,
+    global_norm,
+    lion,
+    scale,
+    scale_by_adam,
+    scale_by_schedule,
+    sgdm,
+    add_decayed_weights,
+    apply_updates,
+)
+from repro.optim.schedules import (
+    constant,
+    cosine,
+    linear_warmup,
+    wsd,
+)
+
+__all__ = [
+    "GradientTransformation", "adamw", "chain", "clip_by_global_norm",
+    "global_norm", "lion", "scale", "scale_by_adam", "scale_by_schedule",
+    "sgdm", "add_decayed_weights", "apply_updates", "constant", "cosine",
+    "linear_warmup", "wsd",
+]

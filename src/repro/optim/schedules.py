@@ -1,0 +1,49 @@
+"""Learning-rate schedules.
+
+Includes the WSD (warmup–stable–decay) schedule used by MiniCPM
+(arXiv:2404.06395) — the assigned minicpm-2b arch's recipe — alongside
+the usual warmup+cosine.  All schedules are ``step -> lr`` callables on
+traced int32 steps (safe inside jit).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup: int):
+    def fn(step):
+        frac = jnp.minimum(step.astype(jnp.float32) / max(warmup, 1), 1.0)
+        return lr * frac
+    return fn
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0,
+           final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        w = jnp.minimum(s / max(warmup, 1), 1.0) if warmup else 1.0
+        prog = jnp.clip((s - warmup) / max(total_steps - warmup, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * w * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def wsd(lr: float, total_steps: int, warmup: int = 0,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup → Stable (flat) → Decay (MiniCPM): the last ``decay_frac``
+    of training decays exponentially to ``final_frac``·lr."""
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        w = jnp.minimum(s / max(warmup, 1), 1.0) if warmup else 1.0
+        decay_prog = jnp.clip((s - decay_start)
+                              / max(total_steps - decay_start, 1), 0, 1)
+        decay = jnp.power(final_frac, decay_prog)
+        return lr * w * decay
+    return fn

@@ -1,0 +1,186 @@
+"""Composable gradient transformations (optax-style protocol, built from
+scratch — no optax dependency).
+
+Each transformation is (init_fn, update_fn):
+    init(params) -> state
+    update(grads, state, params) -> (updates, state)
+
+The PEFT regime (the paper's) trains only adapter trees, so optimizer
+state is bytes-cheap even for 235B base models — first-moment + second-
+moment live only on the ~0.01% trainable fraction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+
+
+def _float_like(x):
+    return jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+
+
+def _map(fn, *trees):
+    """tree_map that passes through non-float leaves unchanged."""
+    def g(x, *rest):
+        return fn(x, *rest) if _float_like(x) else x
+    return jax.tree_util.tree_map(g, *trees)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree) if _float_like(x)]
+    return jnp.sqrt(sum(leaves) if leaves else jnp.zeros(()))
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        norm = global_norm(grads)
+        factor = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+        return _map(lambda g: g * factor, grads), state
+    return GradientTransformation(init, update)
+
+
+def scale(factor: float) -> GradientTransformation:
+    return GradientTransformation(
+        lambda p: (),
+        lambda g, s, p=None: (_map(lambda x: x * factor, g), s))
+
+
+def scale_by_schedule(schedule) -> GradientTransformation:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        lr = schedule(state["count"])
+        return (_map(lambda g: g * -lr, grads),
+                {"count": state["count"] + 1})
+    return GradientTransformation(init, update)
+
+
+def scale_by_adam(b1: float = 0.9, b2: float = 0.999,
+                  eps: float = 1e-8) -> GradientTransformation:
+    def init(params):
+        zeros = _map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"mu": zeros,
+                "nu": _map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        mu = _map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                  state["mu"], grads)
+        nu = _map(lambda v, g: b2 * v
+                  + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                  state["nu"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        upd = _map(lambda m, v: (m / c1) / (jnp.sqrt(v / c2) + eps), mu, nu)
+        return upd, {"mu": mu, "nu": nu, "count": count}
+    return GradientTransformation(init, update)
+
+
+def add_decayed_weights(weight_decay: float,
+                        mask: Optional[Callable[[str], bool]] = None
+                        ) -> GradientTransformation:
+    """AdamW-style decoupled weight decay. ``mask`` maps leaf path →
+    bool (decay or not); default decays every ≥2-D kernel."""
+    from repro.common.pytree import flatten_with_paths, map_with_paths
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        if weight_decay == 0.0 or params is None:
+            return grads, state
+        pmap = dict(flatten_with_paths(params))
+
+        def add_wd(path, g):
+            p = pmap.get(path)
+            if p is None or not _float_like(g):
+                return g
+            decay = (mask(path) if mask is not None
+                     else getattr(p, "ndim", 0) >= 2)
+            return g + weight_decay * p.astype(g.dtype) if decay else g
+
+        return map_with_paths(add_wd, grads), state
+    return GradientTransformation(init, update)
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s2 = t.update(grads, s, params)
+            new_state.append(s2)
+        return grads, tuple(new_state)
+    return GradientTransformation(init, update)
+
+
+def adamw(schedule, *, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+          clip_norm: Optional[float] = 1.0,
+          wd_mask=None) -> GradientTransformation:
+    """The default PEFT optimizer. Paper App. C.4: ETHER sets wd=0 (the
+    hyperplane normalization makes decay a no-op on direction)."""
+    parts = []
+    if clip_norm is not None:
+        parts.append(clip_by_global_norm(clip_norm))
+    parts.append(scale_by_adam(b1, b2, eps))
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay, wd_mask))
+    parts.append(scale_by_schedule(schedule))
+    return chain(*parts)
+
+
+def sgdm(schedule, momentum: float = 0.9) -> GradientTransformation:
+    def init(params):
+        return {"m": _map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        m = _map(lambda m0, g: momentum * m0 + g.astype(jnp.float32),
+                 state["m"], grads)
+        lr = schedule(state["count"])
+        return (_map(lambda x: x * -lr, m),
+                {"m": m, "count": state["count"] + 1})
+    return GradientTransformation(init, update)
+
+
+def lion(schedule, b1: float = 0.9, b2: float = 0.99,
+         weight_decay: float = 0.0) -> GradientTransformation:
+    def init(params):
+        return {"m": _map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        upd = _map(lambda m0, g: jnp.sign(
+            b1 * m0 + (1 - b1) * g.astype(jnp.float32)), state["m"], grads)
+        if weight_decay and params is not None:
+            upd = _map(lambda u, p: u + weight_decay * p.astype(u.dtype),
+                       upd, params)
+        m = _map(lambda m0, g: b2 * m0 + (1 - b2) * g.astype(jnp.float32),
+                 state["m"], grads)
+        lr = schedule(state["count"])
+        return (_map(lambda x: x * -lr, upd),
+                {"m": m, "count": state["count"] + 1})
+    return GradientTransformation(init, update)
+
+
+def apply_updates(params, updates):
+    return _map(lambda p, u: (p.astype(jnp.float32)
+                              + u.astype(jnp.float32)).astype(p.dtype),
+                params, updates)

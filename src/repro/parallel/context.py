@@ -1,0 +1,139 @@
+"""Mesh/policy context: models stay parallelism-agnostic and read the
+active sharding policy from here (set by the launcher / dry-run inside
+``with mesh:``). When no context is set (unit tests, single device) every
+hook is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CURRENT: list["MeshContext"] = []
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    mesh: Mesh
+    # activation sharding policy
+    seq_shard: bool = True          # Megatron-style sequence-sharded residual
+    act_embed_shard: bool = False   # shard d_model of activations instead
+    # §Perf B1: constrain q/k/v to head-sharded full-sequence layout so
+    # attention runs collective-free per head shard (gather at entry,
+    # scatter at exit — instead of XLA's per-chunk all-reduces)
+    head_shard_attn: bool = True
+    # §Perf C1: store attention logits/probs in bf16 (softmax stats in
+    # f32) — halves the dominant memory-bound elementwise traffic
+    attn_probs_bf16: bool = False
+    # §Perf A1: shard_map all-to-all MoE dispatch (vs GSPMD-partitioned
+    # global sort, which lowers to full-buffer all-reduces)
+    moe_a2a: bool = True
+
+    @property
+    def dp_axes(self) -> tuple[str, ...]:
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape.get("model", 1)
+
+
+def get_context() -> Optional[MeshContext]:
+    return _CURRENT[-1] if _CURRENT else None
+
+
+@contextlib.contextmanager
+def mesh_context(ctx: MeshContext):
+    _CURRENT.append(ctx)
+    try:
+        with ctx.mesh:
+            yield ctx
+    finally:
+        _CURRENT.pop()
+
+
+def shard_hidden(x: jax.Array) -> jax.Array:
+    """Residual-stream constraint: (B→dp, S→model, d) when divisible —
+    Megatron sequence parallelism. This is what keeps 62-layer scan
+    carries at ~3.5 GB/chip instead of ~57 GB for deepseek-33b train_4k
+    (DESIGN.md §4)."""
+    ctx = get_context()
+    if ctx is None or x.ndim != 3:
+        return x
+    b, s, _ = x.shape
+    bspec = ctx.dp_axes if b % ctx.dp_size == 0 and b > 1 else None
+    sspec = ("model" if ctx.seq_shard and s % ctx.model_size == 0 and s > 1
+             else None)
+    dspec = ("model" if ctx.act_embed_shard and not sspec else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(bspec, sspec, dspec)))
+
+
+def shard_moe_buffer(x: jax.Array) -> jax.Array:
+    """Expert dispatch buffer (E, C, d): E→model (EP), C→dp."""
+    ctx = get_context()
+    if ctx is None or x.ndim != 3:
+        return x
+    e, c, _ = x.shape
+    espec = "model" if e % ctx.model_size == 0 else None
+    cspec = ctx.dp_axes if c % ctx.dp_size == 0 else None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(espec, cspec, None)))
+
+
+def shard_heads(x: jax.Array, role: str = "q") -> jax.Array:
+    """(B, H, S, D) attention operand layout for collective-free
+    attention: B→dp; heads→model when divisible. Fallbacks when H is not
+    a multiple of the model axis: queries shard the *sequence* dim (each
+    chip owns its q rows against full K/V); small GQA K/V replicate
+    (a few hundred MB at most — the GQA win)."""
+    ctx = get_context()
+    if ctx is None or x.ndim != 4 or not ctx.head_shard_attn:
+        return x
+    b, h, s, _ = x.shape
+    m = ctx.model_size
+    bspec = ctx.dp_axes if b % ctx.dp_size == 0 and b > 1 else None
+    if h % m == 0:
+        # clean TP: whole attention local to a head shard
+        spec = P(bspec, "model", None, None)
+    elif role == "out" and s % m == 0 and s > 1:
+        # §Perf B4: non-divisible heads — three measured dead ends
+        # (seq-sharded q / padded head-shard / replicated KV all grew
+        # HBM or link, see EXPERIMENTS §Perf B). Only the attention
+        # *output* is constrained back to the sequence-sharded residual
+        # layout, turning the partial-T psum into a reduce-scatter.
+        spec = P(bspec, None, "model", None)
+    else:
+        return x                                  # leave to GSPMD
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh,
+                                                             spec))
+
+
+def attn_probs_dtype(default):
+    ctx = get_context()
+    if ctx is not None and ctx.attn_probs_bf16:
+        import jax.numpy as jnp
+        return jnp.bfloat16
+    return default
+
+
+def shard_logits(x: jax.Array) -> jax.Array:
+    """(B, S, V): B→dp, V→model (vocab-parallel CE)."""
+    ctx = get_context()
+    if ctx is None or x.ndim != 3:
+        return x
+    b = x.shape[0]
+    bspec = ctx.dp_axes if b % ctx.dp_size == 0 and b > 1 else None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(bspec, None, "model")))

@@ -1,0 +1,11 @@
+from repro.runtime.straggler import StepTimer
+from repro.runtime.compression import (
+    ef_int8_compress,
+    ef_int8_decompress,
+    compressed_psum,
+    init_ef_state,
+)
+from repro.runtime.elastic import best_mesh_shape, remesh
+
+__all__ = ["StepTimer", "ef_int8_compress", "ef_int8_decompress",
+           "compressed_psum", "init_ef_state", "best_mesh_shape", "remesh"]

@@ -1,0 +1,31 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess(code: str, *, devices: int = 1, timeout: int = 300):
+    """Run a python snippet in a fresh process with N fake CPU devices.
+
+    Multi-device tests must not pollute this process's jax device count
+    (smoke tests see 1 device), hence subprocesses.
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices}")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{out.stdout}\n"
+            f"STDERR:\n{out.stderr}")
+    return out.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_subprocess

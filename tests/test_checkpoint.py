@@ -1,0 +1,77 @@
+"""Checkpoint manager: atomicity, retention, async, template restore."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step
+
+
+def _tree(v=1.0):
+    return {"a": {"kernel": jnp.full((3, 2), v)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_roundtrip_with_template(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    tree = _tree(2.5)
+    mgr.save(10, tree, extra={"data": {"step": 10}})
+    restored, extra = mgr.restore(template=tree)
+    np.testing.assert_allclose(restored["a"]["kernel"], tree["a"]["kernel"])
+    assert int(restored["step"]) == 7
+    assert extra["data"]["step"] == 10
+
+
+def test_latest_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(float(s)))
+    assert latest_step(str(tmp_path)) == 4
+    kept = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                  if d.startswith("step_"))
+    assert kept == [3, 4]
+
+
+def test_keep_every_pins_checkpoints(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=1, keep_every=2,
+                            async_write=False)
+    for s in (1, 2, 3):
+        mgr.save(s, _tree())
+    kept = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                  if d.startswith("step_"))
+    assert 2 in kept and 3 in kept
+
+
+def test_async_save_then_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=True)
+    mgr.save(5, _tree(1.5))
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 5
+    restored, _ = mgr.restore(template=_tree())
+    np.testing.assert_allclose(restored["a"]["kernel"], 1.5)
+
+
+def test_tmp_dirs_never_visible(tmp_path):
+    """Atomic publish: a .tmp directory is not a restorable checkpoint."""
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    os.makedirs(str(tmp_path / "step_99.tmp"))
+    assert latest_step(str(tmp_path)) is None
+    mgr.save(1, _tree())
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_restore_none_when_empty(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    tree, extra = mgr.restore(template=None)
+    assert tree is None and extra is None
+
+
+def test_dtype_preserved_via_template(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    tree = {"w": jnp.ones((2,), jnp.bfloat16)}
+    mgr.save(1, tree)
+    restored, _ = mgr.restore(template=tree)
+    assert restored["w"].dtype == jnp.bfloat16

@@ -1,0 +1,58 @@
+"""Data pipeline: determinism, resumability, corpus reader."""
+
+import numpy as np
+import pytest
+
+from repro.data.pipeline import (DataState, PackedBinaryDataset,
+                                 SyntheticLMStream, write_synthetic_corpus)
+
+
+def test_synthetic_deterministic_per_step():
+    s1 = SyntheticLMStream(vocab=100, batch=4, seq_len=16, seed=3)
+    s2 = SyntheticLMStream(vocab=100, batch=4, seq_len=16, seed=3)
+    for step in (0, 5, 1000):
+        b1, b2 = s1.batch_at(step), s2.batch_at(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(s1.batch_at(0)["tokens"],
+                              s1.batch_at(1)["tokens"])
+
+
+def test_synthetic_labels_shifted():
+    s = SyntheticLMStream(vocab=50, batch=2, seq_len=8, seed=0)
+    b = s.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_resume_cursor_exact():
+    """Resuming from DataState replays the identical remaining stream —
+    the fault-tolerance contract."""
+    s = SyntheticLMStream(vocab=100, batch=2, seq_len=8, seed=1)
+    run1 = [s.batch_at(i)["tokens"] for i in range(10)]
+    st = DataState(step=4)
+    st2 = DataState.from_dict(st.to_dict())
+    run2 = [s.batch_at(st2.step + i)["tokens"] for i in range(6)]
+    for a, b in zip(run1[4:], run2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_binary_corpus_roundtrip(tmp_path):
+    path = str(tmp_path / "corpus.bin")
+    write_synthetic_corpus(path, n_tokens=10_000, vocab=97, seed=0)
+    ds = PackedBinaryDataset(path, batch=4, seq_len=32, seed=0)
+    b0 = ds.batch_at(0)
+    assert b0["tokens"].shape == (4, 32)
+    assert b0["tokens"].max() < 97
+    np.testing.assert_array_equal(ds.batch_at(3)["tokens"],
+                                  ds.batch_at(3)["tokens"])
+    # epoch reshuffle: same window set, different order
+    e0 = ds._perm(0)
+    e1 = ds._perm(1)
+    assert not np.array_equal(e0, e1)
+    np.testing.assert_array_equal(np.sort(e0), np.sort(e1))
+
+
+def test_binary_corpus_too_small(tmp_path):
+    path = str(tmp_path / "tiny.bin")
+    write_synthetic_corpus(path, n_tokens=50, vocab=10)
+    with pytest.raises(ValueError):
+        PackedBinaryDataset(path, batch=8, seq_len=32)

@@ -1,0 +1,185 @@
+"""Per-architecture smoke tests (assignment deliverable f): every
+assigned arch instantiates a reduced same-family config and runs one
+forward/train step on CPU asserting shapes + no NaNs — plus decode/
+prefill consistency for every cache family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALIASES, get_config, peft_targets
+from repro.core.peft import init_adapters, merge_params
+from repro.core.transforms import PEFTConfig
+from repro.models import (EncDecConfig, decode_step, init_model, prefill,
+                          train_loss)
+from repro.models.api import pad_cache
+
+RNG = jax.random.PRNGKey(0)
+ARCHS = list(ALIASES)
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    r = jax.random.PRNGKey(seed)
+    if isinstance(cfg, EncDecConfig):
+        toks = jax.random.randint(r, (B, S), 0, cfg.vocab)
+        return {"tokens": toks, "labels": toks,
+                "frame_embeds": jax.random.normal(
+                    jax.random.fold_in(r, 1), (B, cfg.n_frames, cfg.d_model),
+                    cfg.cdt())}
+    toks = jax.random.randint(r, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if getattr(cfg, "frontend", None) == "vision":
+        batch["image_embeds"] = jax.random.normal(
+            jax.random.fold_in(r, 1), (B, cfg.n_img_tokens, cfg.d_frontend),
+            cfg.cdt())
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_train_step(arch):
+    """One PEFT train step: finite loss, gradient flows to adapters only."""
+    cfg = get_config(arch, "smoke")
+    peft = PEFTConfig(method="ether", n_blocks=4,
+                      targets=peft_targets(arch))
+    params = init_model(RNG, cfg)
+    adapters = init_adapters(jax.random.PRNGKey(1), params, peft)
+    assert adapters, f"{arch}: no modules matched PEFT targets"
+    batch = _batch(cfg)
+
+    def loss_fn(a):
+        return train_loss(params, a, batch, cfg, peft)
+
+    (loss, metrics), grads = jax.value_and_grad(
+        loss_fn, has_aux=True)(adapters)
+    assert jnp.isfinite(loss), f"{arch}: loss={loss}"
+    gnorm = sum(float(jnp.sum(jnp.abs(g)))
+                for g in jax.tree_util.tree_leaves(grads)
+                if jnp.issubdtype(g.dtype, jnp.floating))
+    assert gnorm > 0, f"{arch}: zero adapter gradients"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_prefill_decode_shapes(arch):
+    cfg = get_config(arch, "smoke")
+    peft = PEFTConfig(method="ether", n_blocks=4,
+                      targets=peft_targets(arch))
+    params = init_model(RNG, cfg)
+    adapters = init_adapters(jax.random.PRNGKey(1), params, peft)
+    batch = _batch(cfg)
+    cache, logits = prefill(params, adapters, batch, cfg, peft)
+    B = batch["tokens"].shape[0]
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert jnp.all(jnp.isfinite(logits))
+    cache = pad_cache(cache, cfg, batch["tokens"].shape[1] + 4)
+    lg, cache2 = decode_step(params, adapters, cache,
+                             batch["tokens"][:, -1:], cfg, peft)
+    assert lg.shape == (B, 1, cfg.vocab)
+    assert jnp.all(jnp.isfinite(lg))
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "mamba2-1.3b",
+                                  "recurrentgemma-9b", "olmoe-1b-7b",
+                                  "whisper-large-v3"])
+def test_decode_matches_teacher_forcing(arch):
+    """Prefill on S tokens then decode token S must equal the full
+    forward on S+1 tokens — exact cache semantics per family (full attn,
+    SSM recurrence, RG-LRU + ring window, MoE, enc-dec).
+
+    MoE uses a high capacity factor here: capacity *drops* legitimately
+    differ between batch shapes (verified: cf=8 ⇒ 1e-6 agreement)."""
+    import dataclasses
+    cfg = get_config(arch, "smoke")
+    if getattr(cfg, "mlp_type", "") == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    peft = PEFTConfig(method="ether", n_blocks=4,
+                      targets=peft_targets(arch))
+    params = init_model(RNG, cfg)
+    adapters = init_adapters(jax.random.PRNGKey(1), params, peft)
+    B, S = 2, 24
+    full = _batch(cfg, B=B, S=S + 1, seed=3)
+    prompt = {k: (v[:, :S] if k in ("tokens", "labels") else v)
+              for k, v in full.items()}
+
+    cache, logits_p = prefill(params, adapters, prompt, cfg, peft)
+    cache = pad_cache(cache, cfg, S + 8)
+    lg, _ = decode_step(params, adapters, cache, full["tokens"][:, S:S + 1],
+                        cfg, peft)
+
+    # teacher forcing on the full sequence
+    cache_f, logits_f = prefill(params, adapters, full, cfg, peft)
+    np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                               np.asarray(logits_f[:, -1]),
+                               atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "qwen2.5-32b"])
+def test_merged_serving_equivalence(arch):
+    """Paper §3.1: adapters absorb into W with zero behavior change."""
+    cfg = get_config(arch, "smoke")
+    peft = PEFTConfig(method="ether", n_blocks=4,
+                      targets=peft_targets(arch))
+    params = init_model(RNG, cfg)
+    adapters = init_adapters(jax.random.PRNGKey(1), params, peft)
+    batch = _batch(cfg)
+    _, logits_adapted = prefill(params, adapters, batch, cfg, peft)
+    merged = merge_params(params, adapters, peft)
+    _, logits_merged = prefill(merged, None, batch, cfg, None)
+    np.testing.assert_allclose(np.asarray(logits_adapted),
+                               np.asarray(logits_merged),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_scan_vs_unrolled_layers_identical():
+    """scan_layers=True must be numerically identical to the unrolled
+    python loop (same per-layer params required — seed both the same)."""
+    from repro.models import backbone
+    import dataclasses
+    cfg_scan = get_config("smollm-360m", "smoke")
+    cfg_loop = dataclasses.replace(cfg_scan, scan_layers=False)
+    # init scanned then re-layout the stacked params into per-layer dicts
+    p_scan = init_model(RNG, cfg_scan)
+    p_loop = {k: v for k, v in p_scan.items() if k != "units"}
+    units = {}
+    L = cfg_scan.n_layers
+    for i in range(L):
+        units[f"layer{i}"] = jax.tree_util.tree_map(
+            lambda x: x[i], p_scan["units"]["pos0"])
+    p_loop["units"] = units
+    batch = _batch(cfg_scan)
+    l1, _ = train_loss(p_scan, None, batch, cfg_scan, None)
+    l2, _ = train_loss(p_loop, None, batch, cfg_loop, None)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_vlm_image_tokens_prepended():
+    cfg = get_config("llava-next-mistral-7b", "smoke")
+    params = init_model(RNG, cfg)
+    batch = _batch(cfg, S=12)
+    from repro.models import backbone
+    hidden, _, _ = backbone.forward(
+        params, cfg, tokens=batch["tokens"],
+        image_embeds=batch["image_embeds"], mode="train")
+    assert hidden.shape[1] == 12 + cfg.n_img_tokens
+
+
+def test_moe_dispatch_mass_conservation():
+    """With capacity_factor high enough nothing drops; outputs are a
+    convex combination over selected experts."""
+    from repro.models.moe import init_moe, moe_mlp
+    d, ff, E, k = 16, 32, 8, 2
+    p = init_moe(RNG, d, ff, E, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d))
+    y, aux = moe_mlp(p, x, top_k=k, n_experts=E, capacity_factor=8.0)
+    assert float(aux["dropped_frac"]) == 0.0
+    assert jnp.all(jnp.isfinite(y))
+    assert float(aux["aux_loss"]) > 0
+
+
+def test_moe_capacity_drops_counted():
+    from repro.models.moe import init_moe, moe_mlp
+    d, ff, E, k = 16, 32, 8, 4
+    p = init_moe(RNG, d, ff, E, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, d))
+    _, aux = moe_mlp(p, x, top_k=k, n_experts=E, capacity_factor=0.25)
+    assert float(aux["dropped_frac"]) > 0.0

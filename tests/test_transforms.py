@@ -1,0 +1,290 @@
+"""Math properties of the ETHER transform family — the paper's §3 claims
+verified exactly, plus hypothesis property tests on the invariants."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.transforms import (PEFTConfig, adapted_dense,
+                                   adapter_param_count, block_diag_matmul,
+                                   householder_blocks, init_adapter,
+                                   materialize_block_diag,
+                                   materialize_transform, merge_weight,
+                                   reflect_activation,
+                                   reflect_activation_batched,
+                                   reflect_weight, resolve_blocks)
+from repro.core.metrics import (hyperspherical_energy, transform_distance,
+                                weights_distance)
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _perturb(a, scale=0.3, seed=7):
+    """Per-leaf distinct noise (u1/v1 must diverge for a real test)."""
+    from repro.common.pytree import map_with_paths
+
+    def f(path, v):
+        if not jnp.issubdtype(v.dtype, jnp.floating):
+            return v
+        key = jax.random.PRNGKey(seed + (hash(path) % 2**16))
+        return v + scale * jax.random.normal(key, v.shape, v.dtype)
+
+    return map_with_paths(f, a)
+
+
+# ---------------------------------------------------------------------------
+# Paper Eq. 1–2: Householder structure
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d,n", [(8, 1), (16, 4), (32, 8), (24, 3)])
+def test_householder_orthogonal_det_minus_one(d, n):
+    cfg = PEFTConfig(method="ether", n_blocks=n)
+    a = init_adapter(RNG, "ether", d, d, cfg)
+    H = materialize_block_diag(householder_blocks(a["u"]))
+    np.testing.assert_allclose(H @ H.T, np.eye(d), atol=1e-5)
+    # each block is a reflection: det = −1 per block (what Cayley-OFT
+    # cannot express — paper §3.2)
+    blocks = householder_blocks(a["u"])
+    dets = jnp.linalg.det(blocks)
+    np.testing.assert_allclose(dets, -np.ones(n), atol=1e-4)
+
+
+@pytest.mark.parametrize("d,n", [(16, 1), (16, 4), (64, 16)])
+def test_ether_distance_constant_eq2(d, n):
+    """‖H − I‖_F = 2 per block ⇒ 2√n block-diagonal (paper Eq. 2)."""
+    cfg = PEFTConfig(method="ether", n_blocks=n)
+    for seed in range(3):
+        a = init_adapter(jax.random.PRNGKey(seed), "ether", d, d, cfg)
+        tl, _ = transform_distance(a, cfg, d, d)
+        np.testing.assert_allclose(float(tl), 2.0 * np.sqrt(n), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n", [1, 4])
+def test_etherplus_distance_bounded(n):
+    """‖H⁺ − I‖_F ≤ 2 per block (paper §3.3 triangle inequality)."""
+    d = 32
+    cfg = PEFTConfig(method="etherplus", n_blocks=n)
+    for seed in range(5):
+        a = init_adapter(jax.random.PRNGKey(seed), "etherplus", d, d, cfg)
+        a = _perturb(a, scale=3.0, seed=seed)   # arbitrary training drift
+        tl, tr = transform_distance(a, cfg, d, d)
+        assert float(tl) <= 2.0 * np.sqrt(n) + 1e-4
+        assert float(tr) <= 2.0 * np.sqrt(n) + 1e-4
+
+
+def test_etherplus_identity_at_init():
+    """v = u at init ⇒ H⁺ = I exactly (no perturbation at step 0)."""
+    d, f = 24, 16
+    cfg = PEFTConfig(method="etherplus", n_blocks=4)
+    a = init_adapter(RNG, "etherplus", d, f, cfg)
+    TL, TR = materialize_transform(a, cfg, d, f)
+    np.testing.assert_allclose(TL, np.eye(d), atol=1e-6)
+    np.testing.assert_allclose(TR, np.eye(f), atol=1e-6)
+
+
+def test_oft_cayley_orthogonal_det_plus_one():
+    """OFT's Cayley Q is orthogonal with det = +1 — rotations only
+    (paper's motivation for why reflections are out of OFT's reach)."""
+    d, n = 16, 4
+    cfg = PEFTConfig(method="oft", n_blocks=n)
+    a = _perturb(init_adapter(RNG, "oft", d, d, cfg), 0.5)
+    TL, _ = materialize_transform(a, cfg, d, d)
+    np.testing.assert_allclose(TL @ TL.T, np.eye(d), atol=1e-4)
+    assert float(jnp.linalg.det(TL)) == pytest.approx(1.0, abs=1e-3)
+
+
+def test_oft_unbounded_vs_ether_bounded():
+    """Fig. 4: Naive/OFT-style transforms drift arbitrarily far from I;
+    ETHER cannot."""
+    d, n = 16, 1
+    big = 50.0
+    naive_cfg = PEFTConfig(method="naive", n_blocks=n)
+    a = init_adapter(RNG, "naive", d, d, naive_cfg)
+    a = {"m": a["m"] * big}
+    tl, _ = transform_distance(a, naive_cfg, d, d)
+    assert float(tl) > 100.0
+    ether_cfg = PEFTConfig(method="ether", n_blocks=n)
+    e = init_adapter(RNG, "ether", d, d, ether_cfg)
+    e = {"u": e["u"] * big}                     # scale is normalized away
+    tl2, _ = transform_distance(e, ether_cfg, d, d)
+    np.testing.assert_allclose(float(tl2), 2.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Execution-mode equivalence (activation ≡ weight ≡ blockgemm ≡ merged)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["ether", "etherplus", "oft", "naive",
+                                    "lora", "vera"])
+@pytest.mark.parametrize("d,f,n", [(16, 24, 4), (32, 32, 1), (24, 40, 8)])
+def test_mode_equivalence(method, d, f, n):
+    cfg_a = PEFTConfig(method=method, n_blocks=n, rank=4,
+                       mode="activation")
+    a = _perturb(init_adapter(RNG, method, d, f, cfg_a))
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, d))
+    W = jax.random.normal(jax.random.PRNGKey(2), (d, f))
+    b = jax.random.normal(jax.random.PRNGKey(3), (f,))
+    y_act = adapted_dense(x, W, b, a, cfg_a)
+    for mode in ("weight", "blockgemm"):
+        cfg_m = PEFTConfig(method=method, n_blocks=n, rank=4, mode=mode)
+        y = adapted_dense(x, W, b, a, cfg_m)
+        np.testing.assert_allclose(y, y_act, atol=2e-4)
+    y_merged = x @ merge_weight(W, a, cfg_a) + b
+    np.testing.assert_allclose(y_merged, y_act, atol=2e-4)
+
+
+def test_blockgemm_is_paper_literal():
+    """§3.4: block-diag GEMM equals factored rank-1 form exactly."""
+    d, f, n = 32, 16, 8
+    u = jax.random.normal(RNG, (n, d // n))
+    W = jax.random.normal(jax.random.PRNGKey(1), (d, f))
+    lit = block_diag_matmul(householder_blocks(u), W)
+    fac = reflect_weight(W, u)
+    np.testing.assert_allclose(lit, fac, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Parameter accounting (paper Tables 2/3/5 '#params')
+# ---------------------------------------------------------------------------
+
+def test_param_count_block_invariance():
+    """ETHER's count is n-independent (paper §3.4) — OFT's is not."""
+    d, f = 4096, 4096
+    counts = {n: adapter_param_count(
+        "ether", d, f, PEFTConfig(method="ether", n_blocks=n))
+        for n in (1, 4, 32)}
+    assert len(set(counts.values())) == 1 and counts[1] == d
+    oft = [adapter_param_count("oft", d, f,
+                               PEFTConfig(method="oft", n_blocks=n))
+           for n in (4, 32)]
+    assert oft[0] > oft[1]
+
+
+def test_param_complexity_ordering():
+    """O(Ld) ETHER < O(L(d+f)) ETHER+ < O(Lr(d+f)) LoRA < OFT (paper §4)."""
+    d = f = 4096
+    c = {m: adapter_param_count(m, d, f, PEFTConfig(method=m, n_blocks=4,
+                                                    rank=8))
+         for m in ("ether", "etherplus", "lora", "oft")}
+    assert c["ether"] < c["etherplus"] < c["lora"] < c["oft"]
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis property tests
+# ---------------------------------------------------------------------------
+
+@hypothesis.settings(deadline=None, max_examples=25)
+@hypothesis.given(
+    db=st.integers(2, 8), n=st.integers(1, 4),
+    seed=st.integers(0, 2**16))
+def test_prop_reflection_involution(db, n, seed):
+    """H(Hx) = x — a reflection is its own inverse."""
+    d = db * n
+    u = jax.random.normal(jax.random.PRNGKey(seed), (n, db))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (3, d))
+    y = reflect_activation(reflect_activation(x, u), u)
+    np.testing.assert_allclose(y, x, atol=1e-4)
+
+
+@hypothesis.settings(deadline=None, max_examples=25)
+@hypothesis.given(
+    db=st.integers(2, 8), n=st.integers(1, 4),
+    seed=st.integers(0, 2**16))
+def test_prop_reflection_preserves_norm(db, n, seed):
+    """Orthogonality ⇒ ‖Hx‖ = ‖x‖ (hyperspherical energy of activations
+    unchanged under ETHER — the HE story of §5.3)."""
+    d = db * n
+    u = jax.random.normal(jax.random.PRNGKey(seed), (n, db))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (4, d))
+    y = reflect_activation(x, u)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-4)
+
+
+@hypothesis.settings(deadline=None, max_examples=20)
+@hypothesis.given(seed=st.integers(0, 2**16), scale=st.floats(0.1, 100.0))
+def test_prop_ether_scale_invariance(seed, scale):
+    """u and c·u define the same hyperplane ⇒ same transform."""
+    d, n = 12, 3
+    u = jax.random.normal(jax.random.PRNGKey(seed), (n, d // n))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, d))
+    np.testing.assert_allclose(reflect_activation(x, u),
+                               reflect_activation(x, u * scale), atol=1e-4)
+
+
+@hypothesis.settings(deadline=None, max_examples=15)
+@hypothesis.given(n=st.sampled_from([1, 2, 4]), seed=st.integers(0, 999))
+def test_prop_merge_equals_apply(n, seed):
+    d, f = 16, 8
+    for method in ("ether", "etherplus"):
+        cfg = PEFTConfig(method=method, n_blocks=n)
+        a = _perturb(init_adapter(jax.random.PRNGKey(seed), method, d, f,
+                                  cfg), seed=seed)
+        x = jax.random.normal(jax.random.PRNGKey(seed + 2), (3, d))
+        W = jax.random.normal(jax.random.PRNGKey(seed + 3), (d, f))
+        np.testing.assert_allclose(
+            adapted_dense(x, W, None, a, cfg),
+            x @ merge_weight(W, a, cfg), atol=2e-4)
+
+
+def test_resolve_blocks():
+    assert resolve_blocks(32, 4096) == 32
+    assert resolve_blocks(32, 960) == 32        # 960 % 32 == 0
+    assert resolve_blocks(32, 50) == 25
+    assert resolve_blocks(7, 64) == 4           # falls to largest divisor
+    assert resolve_blocks(1, 13) == 1
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant batched serving
+# ---------------------------------------------------------------------------
+
+def test_batched_reflection_matches_per_sequence():
+    d, n, tenants, B, S = 16, 4, 5, 6, 3
+    bank = jax.random.normal(RNG, (tenants, n, d // n))
+    ids = jnp.array([0, 3, 1, 4, 0, 2], jnp.int32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
+    out = reflect_activation_batched(x, bank, ids)
+    for b in range(B):
+        exp = reflect_activation(x[b], bank[ids[b]])
+        np.testing.assert_allclose(out[b], exp, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Hyperspherical energy (paper §5.3 / Fig. 7)
+# ---------------------------------------------------------------------------
+
+def test_he_invariant_under_orthogonal_not_under_etherplus():
+    d, f = 24, 12
+    W = jax.random.normal(RNG, (d, f))
+    he0 = float(hyperspherical_energy(W))
+    # ETHER (orthogonal): HE of Q·W changes only via column norms — the
+    # paper's Fig. 7 shows ETHER ≈ 0 ΔHE; verify exactly for one block
+    cfg = PEFTConfig(method="ether", n_blocks=1)
+    a = init_adapter(RNG, "ether", d, f, cfg)
+    he1 = float(hyperspherical_energy(merge_weight(W, a, cfg)))
+    assert abs(he1 - he0) / he0 < 1e-3
+    # ETHER+ (non-orthogonal) changes HE
+    cfgp = PEFTConfig(method="etherplus", n_blocks=1)
+    ap = _perturb(init_adapter(RNG, "etherplus", d, f, cfgp), 1.0)
+    hep = float(hyperspherical_energy(merge_weight(W, ap, cfgp)))
+    assert abs(hep - he0) / he0 > 1e-3
+
+
+def test_weights_distance_scales_with_lr_analog():
+    """Fig. 4 right: weight drift grows unbounded for naive, stays
+    bounded for ETHER under the same parameter magnitudes."""
+    d = f = 16
+    W = jax.random.normal(RNG, (d, f))
+    for scale, method in [(10.0, "naive"), (10.0, "ether")]:
+        cfg = PEFTConfig(method=method, n_blocks=1)
+        a = init_adapter(RNG, method, d, f, cfg)
+        a = jax.tree_util.tree_map(lambda v: v * scale, a)
+        dist = float(weights_distance(W, a, cfg))
+        if method == "ether":
+            assert dist <= 2.0 * float(jnp.linalg.norm(W)) + 1e-3
+        else:
+            assert dist > 2.0 * float(jnp.linalg.norm(W))
