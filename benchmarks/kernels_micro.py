@@ -15,10 +15,19 @@ def run():
     x = jax.random.normal(k, (512, 1024))
     u = jax.random.normal(jax.random.fold_in(k, 1), (32, 32))
     w = jax.random.normal(jax.random.fold_in(k, 2), (1024, 1024))
+    # multi-tenant: 256-tenant bank, 8 requests × 64 tokens
+    import jax.numpy as jnp
+    xb = jax.random.normal(jax.random.fold_in(k, 3), (8, 64, 1024))
+    bank = jax.random.normal(jax.random.fold_in(k, 4), (256, 32, 32))
+    ids = jax.random.randint(jax.random.fold_in(k, 5), (8,), 0, 256,
+                             jnp.int32)
 
     pairs = [
         ("ether_reflect", lambda: ops.ether_reflect(x, u),
          lambda: ref.ref_ether_reflect(x, u)),
+        ("ether_reflect_batched",
+         lambda: ops.ether_reflect_batched(xb, bank, ids),
+         lambda: ref.ref_ether_reflect_batched(xb, bank, ids)),
         ("householder_gemm", lambda: ops.householder_gemm(x, w, u),
          lambda: ref.ref_householder_gemm(x, w, u)),
         ("ether_merge", lambda: ops.ether_merge(w, u),

@@ -21,13 +21,16 @@ from repro.core.transforms import (
     resolve_blocks,
 )
 from repro.core.peft import (
+    AdapterBank,
     adapters_param_count,
     get_adapter,
+    init_adapter_bank,
     init_adapters,
     is_target,
     merge_params,
     trainable_mask,
 )
+from repro.core import execute
 from repro.core.metrics import (
     frobenius,
     he_difference,
@@ -41,7 +44,8 @@ __all__ = [
     "block_diag_matmul", "householder_blocks", "init_adapter",
     "materialize_transform", "merge_weight", "reflect_activation",
     "reflect_activation_batched", "reflect_weight", "resolve_blocks",
-    "adapters_param_count", "get_adapter", "init_adapters", "is_target",
+    "AdapterBank", "adapters_param_count", "execute", "get_adapter",
+    "init_adapter_bank", "init_adapters", "is_target",
     "merge_params", "trainable_mask", "frobenius", "he_difference",
     "hyperspherical_energy", "transform_distance", "weights_distance",
 ]

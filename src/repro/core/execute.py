@@ -1,0 +1,262 @@
+"""Execution-backend dispatch for the ETHER hot paths (DESIGN.md §3).
+
+``core.transforms.adapted_dense`` (and ``merge_weight``) route every
+ETHER compute through this registry instead of hard-coding jnp einsums.
+The registry maps ``(op, backend)`` to an implementation:
+
+``jnp``
+    The reference einsum formulations in ``core.transforms`` — always
+    available, always correct, differentiable; the default backend.
+
+``pallas``
+    The TPU kernels in ``repro.kernels`` (``ether_reflect``,
+    ``householder_gemm``, ``ether_merge``, ``ether_reflect_batched``).
+    Off-TPU the kernels run in interpret mode (Python emulation) so the
+    identical code path is validated on CPU and deployed on TPU.
+
+``auto``
+    Per-call selection: ``pallas`` when the operand shapes satisfy the
+    kernel's tiling constraints (see the ``supports_rule`` predicates),
+    ``jnp`` otherwise.  This is what serving configs use — hot prefill
+    shapes hit the MXU kernels, odd decode shapes fall back.
+
+Selection happens at trace time (shapes are static under jit), so a
+jitted forward bakes in exactly one implementation per call site and the
+dispatch itself costs nothing at runtime.  ``counters()`` exposes how
+often each (op, backend) pair was *traced* — tests and the serving
+driver use it to assert the Pallas path is actually live.
+
+The shared ``_interpret`` helper lives here (moved from ``kernels.ops``)
+so direct kernel callers and the dispatch layer agree on one platform
+auto-detection rule.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Callable
+
+import jax
+
+BACKENDS = ("jnp", "pallas", "auto")
+
+_REGISTRY: dict[tuple[str, str], Callable[..., Any]] = {}
+_SUPPORTS: dict[str, Callable[..., bool]] = {}
+_COUNTERS: dict[str, int] = {}
+
+
+def _interpret(flag: bool | None = None) -> bool:
+    """Pallas interpret-mode policy: explicit flag wins, else emulate
+    whenever we are not actually on a TPU."""
+    if flag is not None:
+        return bool(flag)
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def register(op: str, backend: str):
+    """Decorator: register ``fn`` as the ``backend`` implementation of
+    ``op``."""
+    if backend not in ("jnp", "pallas"):
+        raise ValueError(f"implementations must be 'jnp' or 'pallas', "
+                         f"got {backend!r}")
+
+    def deco(fn):
+        _REGISTRY[(op, backend)] = fn
+        return fn
+    return deco
+
+
+def supports_rule(op: str):
+    """Decorator: register the shape-tileability predicate consulted by
+    the ``auto`` backend before selecting the Pallas implementation."""
+    def deco(fn):
+        _SUPPORTS[op] = fn
+        return fn
+    return deco
+
+
+def available(op: str) -> tuple[str, ...]:
+    """Backends registered for ``op`` (registry introspection)."""
+    return tuple(b for (o, b) in _REGISTRY if o == op)
+
+
+def supports(op: str, *args, **kwargs) -> bool:
+    """True when the Pallas kernel's tiling constraints accept these
+    operand shapes."""
+    rule = _SUPPORTS.get(op)
+    return bool(rule(*args, **kwargs)) if rule else False
+
+
+def selected_backend(op: str, backend: str, *args, **kwargs) -> str:
+    """Resolve ``auto`` to a concrete backend for these operands."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of "
+                         f"{BACKENDS}")
+    if backend != "auto":
+        return backend
+    if ("pallas" in available(op)) and supports(op, *args, **kwargs):
+        return "pallas"
+    return "jnp"
+
+
+def dispatch(op: str, backend: str, *args, **kwargs):
+    """Execute ``op`` on the resolved backend, recording a trace count.
+
+    Counter keys are truthful about what actually runs: an explicit
+    ``backend='pallas'`` on shapes the kernel's tiling rejects still
+    calls the pallas wrapper (which safely falls back to the jnp ref
+    internally) but is counted as ``op.pallas_fallback``, so "the Pallas
+    path is live" can be asserted from counters alone."""
+    be = selected_backend(op, backend, *args, **kwargs)
+    impl = _REGISTRY.get((op, be))
+    if impl is None:
+        raise KeyError(f"no {be!r} implementation registered for {op!r}")
+    key = f"{op}.{be}"
+    if be == "pallas" and not supports(op, *args, **kwargs):
+        key = f"{op}.pallas_fallback"
+    _COUNTERS[key] = _COUNTERS.get(key, 0) + 1
+    return impl(*args, **kwargs)
+
+
+def counters() -> dict[str, int]:
+    """Snapshot of per-(op, backend) trace counts."""
+    return dict(_COUNTERS)
+
+
+def reset_counters() -> None:
+    _COUNTERS.clear()
+
+
+# ---------------------------------------------------------------------------
+# Tileability predicates — mirror the fallback logic in kernels.ops so
+# `auto` selects pallas exactly when the wrapper would not itself fall
+# back to the jnp reference.
+# ---------------------------------------------------------------------------
+
+@supports_rule("ether_reflect")
+def _sup_reflect(x, u) -> bool:
+    t = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
+    bt = min(256, t)
+    return bt > 0 and t % bt == 0
+
+
+@supports_rule("householder_gemm")
+def _sup_hh_gemm(x, w, u) -> bool:
+    d, f = w.shape
+    t = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
+    n, db = u.shape
+    bm = 128 if t % 128 == 0 else (t if 0 < t <= 256 else 0)
+    bf = 128 if f % 128 == 0 else 0
+    bk = db * max(1, min(512, d) // db)
+    return bool(bm and bf and d % bk == 0)
+
+
+@supports_rule("ether_merge")
+def _sup_merge(w, u) -> bool:
+    f = w.shape[-1]
+    return f % 512 == 0 or f % 128 == 0
+
+
+@supports_rule("ether_reflect_batched")
+def _sup_reflect_batched(x, u_bank, ids) -> bool:
+    if x.ndim != 3:
+        return False
+    _, s, d = x.shape
+    _, n, db = u_bank.shape
+    bs = min(128, s)
+    # lane-dim friendliness on real TPUs: the feature dim must tile.
+    return bs > 0 and s % bs == 0 and d % 128 == 0 and n * db == d
+
+
+# ---------------------------------------------------------------------------
+# Implementations.  jnp impls import from core.transforms and pallas
+# impls from kernels.ops *inside* the function bodies — both modules
+# import this one at module scope, so top-level imports would cycle.
+#
+# Pallas impls carry a custom_vjp whose backward differentiates the jnp
+# reference: the forward hot path runs the kernel, while gradients (the
+# ETHER `u` vectors ARE the trainables) come from XLA's AD of the
+# mathematically identical einsum form — pallas_call itself has no
+# batching-safe autodiff story on every jax version we support.
+# ---------------------------------------------------------------------------
+
+def _with_ref_vjp(fn, ref_fn):
+    """Wrap a pallas forward with a backward that differentiates ref_fn."""
+    @functools.wraps(fn)
+    @jax.custom_vjp
+    def wrapped(*args):
+        return fn(*args)
+
+    def fwd(*args):
+        return fn(*args), args
+
+    def bwd(residual_args, g):
+        return jax.vjp(ref_fn, *residual_args)[1](g)
+
+    wrapped.defvjp(fwd, bwd)
+    return wrapped
+
+
+@register("ether_reflect", "jnp")
+def _reflect_jnp(x, u):
+    from repro.core.transforms import reflect_activation
+    return reflect_activation(x, u)
+
+
+def _reflect_pallas(x, u):
+    from repro.kernels import ops
+    return ops.ether_reflect(x, u)
+
+
+register("ether_reflect", "pallas")(
+    _with_ref_vjp(_reflect_pallas, _reflect_jnp))
+
+
+@register("householder_gemm", "jnp")
+def _hh_gemm_jnp(x, w, u):
+    from repro.core.transforms import reflect_activation
+    return reflect_activation(x, u) @ w.astype(x.dtype)
+
+
+def _hh_gemm_pallas(x, w, u):
+    from repro.kernels import ops
+    return ops.householder_gemm(x, w, u)
+
+
+register("householder_gemm", "pallas")(
+    _with_ref_vjp(_hh_gemm_pallas, _hh_gemm_jnp))
+
+
+@register("ether_merge", "jnp")
+def _merge_jnp(w, u):
+    from repro.core.transforms import reflect_weight
+    return reflect_weight(w, u)
+
+
+def _merge_pallas(w, u):
+    from repro.kernels import ops
+    return ops.ether_merge(w, u)
+
+
+register("ether_merge", "pallas")(
+    _with_ref_vjp(_merge_pallas, _merge_jnp))
+
+
+@register("ether_reflect_batched", "jnp")
+def _reflect_batched_jnp(x, u_bank, ids):
+    from repro.core.transforms import reflect_activation_batched
+    return reflect_activation_batched(x, u_bank, ids)
+
+
+def _reflect_batched_pallas(x, u_bank, ids):
+    from repro.kernels import ops
+    return ops.ether_reflect_batched(x, u_bank, ids)
+
+
+register("ether_reflect_batched", "pallas")(
+    _with_ref_vjp(_reflect_batched_pallas, _reflect_batched_jnp))

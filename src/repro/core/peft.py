@@ -5,6 +5,12 @@ parameter tree. Works for arbitrarily *stacked* weights: scan-over-layers
 kernels of shape (L, d, f) and MoE expert banks (L, E, d, f) get adapters
 with matching leading stack dims (initialized independently per slice), so
 ``jax.lax.scan`` slices base weights and adapters in lockstep.
+
+Multi-tenant serving (DESIGN.md §2): :class:`AdapterBank` stacks N
+tenants' adapter trees along a *tenant axis inserted after the stack
+dims*, so the same lockstep scan works while every dense layer sees the
+whole bank plus per-request tenant ids — the batched gather-and-reflect
+kernel picks each sequence's hyperplanes on the fly.
 """
 
 from __future__ import annotations
@@ -130,6 +136,118 @@ def _flatten_adapter_modules(adapters: Params, prefix: str = ""):
         for k, v in adapters.items():
             yield from _flatten_adapter_modules(
                 v, f"{prefix}/{k}" if prefix else k)
+
+
+class AdapterBank:
+    """N tenants' adapter trees stacked for multi-tenant serving.
+
+    Each module's adapter leaves carry the tenant axis at position
+    ``stack_ndim`` (i.e. after the module's param stack dims): a scanned
+    (L, n, db) ETHER ``u`` becomes (L, N, n, db), so ``jax.lax.scan``
+    still slices layers in lockstep and each sliced layer sees the full
+    (N, n, db) bank.  ETHER adapters are O(d) per linear, so thousands
+    of tenants cost a few MB of HBM — the property that makes this
+    viable where multi-LoRA banks are not (DESIGN.md §2).
+
+    Only ``method='ether'`` with ``mode='activation'`` is bank-servable
+    (the batched reflection gathers per-request hyperplanes); modules
+    whose inputs lose the batch dim (MoE expert dispatch) cannot carry
+    per-request adapters and raise at trace time.
+    """
+
+    def __init__(self, tree: Params, tenants: int,
+                 stack_ndims: dict[str, int]):
+        self.tree = tree
+        self.tenants = tenants
+        self.stack_ndims = stack_ndims
+
+    @classmethod
+    def stack(cls, trees: list, params: Params,
+              cfg: PEFTConfig) -> "AdapterBank":
+        """Stack N standard adapter trees (each mirroring ``params``)."""
+        if cfg.method != "ether":
+            raise ValueError("AdapterBank supports method='ether' only "
+                             f"(got {cfg.method!r})")
+        if not trees:
+            raise ValueError("need at least one tenant tree")
+        stack_ndims = {
+            path.rsplit("/", 1)[0]: leaf.ndim - 2
+            for path, leaf in flatten_with_paths(params)
+            if is_target(path, leaf, cfg)}
+        bank: Params = {}
+        for mod, adapter in _flatten_adapter_modules(trees[0]):
+            nd = stack_ndims[mod]
+            stacked = {
+                k: jnp.stack([_module(t, mod)[k] for t in trees], axis=nd)
+                for k in adapter}
+            _insert(bank, mod, stacked)
+        return cls(bank, len(trees), stack_ndims)
+
+    def select(self, tenant: int) -> Params:
+        """Single tenant's standard adapter tree (e.g. for merge_params)."""
+        out: Params = {}
+        for mod, adapter in _flatten_adapter_modules(self.tree):
+            nd = self.stack_ndims[mod]
+            _insert(out, mod, {k: jnp.take(v, tenant, axis=nd)
+                               for k, v in adapter.items()})
+        return out
+
+    def request(self, ids: jax.Array) -> Params:
+        """Adapter tree for one batch of requests: every module keeps its
+        full bank and gains an ``ids`` leaf (broadcast over stack dims so
+        scan slices it in lockstep); ``adapted_dense`` detects the pair
+        and runs the batched gather-and-reflect.
+
+        ids must lie in [0, tenants): out-of-range ids follow jax gather
+        semantics (clamp to the last tenant) rather than erroring —
+        request frontends must validate ids before this point."""
+        ids = jnp.asarray(ids, jnp.int32)
+        out: Params = {}
+        for mod, adapter in _flatten_adapter_modules(self.tree):
+            nd = self.stack_ndims[mod]
+            some = next(iter(adapter.values()))
+            stack = some.shape[:nd]
+            _insert(out, mod, {
+                **adapter,
+                "ids": jnp.broadcast_to(ids, (*stack, *ids.shape))})
+        return out
+
+    def size_bytes(self) -> int:
+        """HBM footprint of the whole bank (the multi-tenant headline)."""
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for _, a in _flatten_adapter_modules(self.tree)
+                   for leaf in a.values())
+
+
+def _bank_flatten(bank: AdapterBank):
+    aux = (bank.tenants, tuple(sorted(bank.stack_ndims.items())))
+    return (bank.tree,), aux
+
+
+def _bank_unflatten(aux, children):
+    tenants, stack_items = aux
+    return AdapterBank(children[0], tenants, dict(stack_items))
+
+
+# pytree registration lets a bank ride through jit/donation like any
+# other adapter tree.
+jax.tree_util.register_pytree_node(AdapterBank, _bank_flatten,
+                                   _bank_unflatten)
+
+
+def _module(tree: Params, path: str) -> Params:
+    node = tree
+    for k in path.split("/"):
+        node = node[k]
+    return node
+
+
+def init_adapter_bank(rng: jax.Array, params: Params, cfg: PEFTConfig,
+                      tenants: int) -> AdapterBank:
+    """Initialize ``tenants`` independent adapter trees and stack them."""
+    trees = [init_adapters(jax.random.fold_in(rng, t), params, cfg)
+             for t in range(tenants)]
+    return AdapterBank.stack(trees, params, cfg)
 
 
 def get_adapter(adapters: Optional[Params], *keys: str) -> Optional[Params]:

@@ -26,6 +26,11 @@ Three execution modes (see DESIGN.md §3 — hardware adaptation):
     Materializes the n (db × db) Householder blocks and performs n block
     GEMMs — O(d²f/n) FLOPs, exactly the accounting in paper Table 1.
     Exists so benchmarks/table1_flops.py can reproduce the table.
+
+Orthogonally to the *mode*, ``PEFTConfig.backend`` selects the
+*implementation* of the ETHER hot ops (jnp reference einsums vs the
+Pallas TPU kernels vs per-shape auto-selection); ``adapted_dense`` and
+``merge_weight`` dispatch through :mod:`repro.core.execute`.
 """
 
 from __future__ import annotations
@@ -36,6 +41,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core import execute
 
 Params = dict[str, Any]
 
@@ -59,12 +66,19 @@ class PEFTConfig:
     adapter_dtype: str = "float32"
     # Double-sided application for ETHER+ (paper default; App. D.2 ablates).
     two_sided: bool = True
+    # Execution backend for the ETHER hot paths (DESIGN.md §3):
+    # "jnp" (reference einsums), "pallas" (TPU kernels), or "auto"
+    # (pallas when shapes tile, jnp fallback). Dispatch happens in
+    # core.execute; serving configs opt into "auto".
+    backend: str = "jnp"
 
     def __post_init__(self):
         if self.method not in METHODS:
             raise ValueError(f"unknown PEFT method {self.method!r}")
         if self.mode not in ("activation", "weight", "blockgemm"):
             raise ValueError(f"unknown mode {self.mode!r}")
+        if self.backend not in execute.BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}")
 
 
 def resolve_blocks(n: int, dim: int) -> int:
@@ -120,7 +134,9 @@ def reflect_activation_batched(x: jax.Array, u_bank: jax.Array,
     thousands-of-tenants banks a few MB of HBM (DESIGN.md §2).
     """
     _, n, db = u_bank.shape
-    u = _unit(u_bank)[ids].astype(x.dtype)            # (B, n, db)
+    # Gather each request's vectors FIRST, then normalize: O(B·d) per
+    # call instead of normalizing the whole O(num_adapters·d) bank.
+    u = _unit(u_bank[ids]).astype(x.dtype)            # (B, n, db)
     xb = _blockify(x, n)                              # (B, S, n, db)
     proj = jnp.einsum("bsnd,bnd->bsn", xb, u)
     xb = xb + (sign * coeff) * proj[..., None] * u[:, None]
@@ -307,10 +323,27 @@ def adapted_dense(x: jax.Array, W: jax.Array, b: Optional[jax.Array],
     m = cfg.method
     if m == "ether":
         u = adapter["u"]
-        if cfg.mode == "activation":
-            y = reflect_activation(x, u) @ W.astype(x.dtype)
+        if "ids" in adapter:
+            # Multi-tenant bank (core.peft.AdapterBank): u is the whole
+            # (num_adapters, n, db) bank; each batch row reflects with
+            # its own tenant's hyperplanes (DESIGN.md §2).
+            if cfg.mode != "activation":
+                raise ValueError(
+                    "AdapterBank serving requires mode='activation' "
+                    f"(got {cfg.mode!r}); merge a single tenant via "
+                    "bank.select(i) + merge_params instead")
+            if x.ndim != 3 or x.shape[0] != adapter["ids"].shape[0]:
+                raise ValueError(
+                    f"bank adapters need per-request (B, S, d) inputs; "
+                    f"got x {x.shape} for ids {adapter['ids'].shape}")
+            xr = execute.dispatch("ether_reflect_batched", cfg.backend,
+                                  x, u, adapter["ids"])
+            y = xr @ W.astype(x.dtype)
+        elif cfg.mode == "activation":
+            y = execute.dispatch("householder_gemm", cfg.backend, x, W, u)
         elif cfg.mode == "weight":
-            y = x @ reflect_weight(W, u).astype(x.dtype)
+            y = x @ execute.dispatch("ether_merge", cfg.backend,
+                                     W, u).astype(x.dtype)
         else:  # blockgemm — paper-literal §3.4
             H = householder_blocks(u)
             y = x @ block_diag_matmul(H, W).astype(x.dtype)
@@ -380,7 +413,7 @@ def merge_weight(W: jax.Array, adapter: Optional[Params], cfg: PEFTConfig,
     if m == "ether":
         if literal:
             return block_diag_matmul(householder_blocks(adapter["u"]), W)
-        return reflect_weight(W, adapter["u"])
+        return execute.dispatch("ether_merge", cfg.backend, W, adapter["u"])
     if m == "etherplus":
         if literal:
             HL = (householder_blocks(adapter["u1"], coeff=1.0, sign=-1.0),

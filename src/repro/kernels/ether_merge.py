@@ -27,8 +27,12 @@ def _merge_kernel(u_ref, w_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
 def ether_merge_pallas(w: jax.Array, u: jax.Array, *, block_f: int = 512,
-                       interpret: bool = True) -> jax.Array:
-    """w: (d, f); u: (n, db), n*db == d. Returns H_B w."""
+                       interpret: bool | None = None) -> jax.Array:
+    """w: (d, f); u: (n, db), n*db == d. Returns H_B w.
+
+    interpret=None auto-detects via core.execute._interpret."""
+    from repro.core.execute import _interpret
+    interpret = _interpret(interpret)
     d, f = w.shape
     n, db = u.shape
     assert n * db == d

@@ -33,8 +33,15 @@ def _reflect_kernel(u_ref, x_ref, o_ref, *, n: int, db: int):
 
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
 def ether_reflect_pallas(x: jax.Array, u: jax.Array, *, block_t: int = 256,
-                         interpret: bool = True) -> jax.Array:
-    """x: (T, d) tokens; u: (n, db) with n*db == d. Returns H_B x."""
+                         interpret: bool | None = None) -> jax.Array:
+    """x: (T, d) tokens; u: (n, db) with n*db == d. Returns H_B x.
+
+    interpret=None auto-detects: compiled on TPU, emulated elsewhere
+    (core.execute._interpret) — direct callers no longer silently run the
+    Python interpreter on real hardware.
+    """
+    from repro.core.execute import _interpret
+    interpret = _interpret(interpret)
     t, d = x.shape
     n, db = u.shape
     assert n * db == d, (n, db, d)

@@ -77,8 +77,12 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, window: int | None = None,
                            q_offset: int = 0, block_q: int = 128,
                            block_k: int = 128,
-                           interpret: bool = True) -> jax.Array:
-    """q: (B, H, S, D); k/v: (B, Hkv, T, D), H % Hkv == 0."""
+                           interpret: bool | None = None) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, Hkv, T, D), H % Hkv == 0.
+
+    interpret=None auto-detects via core.execute._interpret."""
+    from repro.core.execute import _interpret
+    interpret = _interpret(interpret)
     b, h, s, d = q.shape
     _, hkv, t, _ = k.shape
     assert h % hkv == 0

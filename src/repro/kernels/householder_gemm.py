@@ -51,8 +51,12 @@ def _hh_gemm_kernel(u_ref, x_ref, w_ref, o_ref, acc_ref, *, nk: int, db: int):
 def householder_gemm_pallas(x: jax.Array, w: jax.Array, u: jax.Array, *,
                             block_m: int = 128, block_f: int = 128,
                             block_k: int = 512,
-                            interpret: bool = True) -> jax.Array:
-    """x: (T, d); w: (d, f); u: (n, db). Returns reflect(x) @ w."""
+                            interpret: bool | None = None) -> jax.Array:
+    """x: (T, d); w: (d, f); u: (n, db). Returns reflect(x) @ w.
+
+    interpret=None auto-detects via core.execute._interpret."""
+    from repro.core.execute import _interpret
+    interpret = _interpret(interpret)
     t, d = x.shape
     d2, f = w.shape
     n, db = u.shape

@@ -11,17 +11,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.execute import _interpret
 from repro.kernels import ref
 from repro.kernels.ether_reflect import ether_reflect_pallas
+from repro.kernels.ether_reflect_batched import ether_reflect_batched_pallas
 from repro.kernels.ether_merge import ether_merge_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.householder_gemm import householder_gemm_pallas
-
-
-def _interpret(flag):
-    if flag is not None:
-        return bool(flag)
-    return jax.default_backend() != "tpu"
 
 
 def ether_reflect(x: jax.Array, u: jax.Array, *, block_t: int = 256,
@@ -37,6 +33,20 @@ def ether_reflect(x: jax.Array, u: jax.Array, *, block_t: int = 256,
     out = ether_reflect_pallas(x2, u, block_t=bt,
                                interpret=_interpret(interpret))
     return out.reshape(x.shape)
+
+
+def ether_reflect_batched(x: jax.Array, u_bank: jax.Array, ids: jax.Array,
+                          *, block_s: int = 128,
+                          interpret: bool | None = None) -> jax.Array:
+    """Per-tenant gather-and-reflect. x: (B, S, d); u_bank: (A, n, db);
+    ids: (B,). Falls back to the jnp ref for non-tileable shapes."""
+    b, s, d = x.shape
+    _, n, db = u_bank.shape
+    bs = min(block_s, s)
+    if bs == 0 or s % bs or n * db != d:
+        return ref.ref_ether_reflect_batched(x, u_bank, ids)
+    return ether_reflect_batched_pallas(x, u_bank, ids, block_s=bs,
+                                        interpret=interpret)
 
 
 def householder_gemm(x: jax.Array, w: jax.Array, u: jax.Array, *,

@@ -23,6 +23,19 @@ def ref_ether_reflect(x, u):
     return out.reshape(x.shape)
 
 
+def ref_ether_reflect_batched(x, u_bank, ids):
+    """Per-tenant gather-and-reflect. x: (B, S, d); u_bank: (A, n, db);
+    ids: (B,) int32. Gathers each sequence's hyperplanes, then reflects."""
+    _, n, db = u_bank.shape
+    u = u_bank[ids]                                           # (B, n, db)
+    uh = (u / (jnp.linalg.norm(u, axis=-1, keepdims=True) + 1e-8)
+          ).astype(x.dtype)
+    xb = x.reshape(*x.shape[:-1], n, db)
+    proj = jnp.einsum("bsnd,bnd->bsn", xb, uh)
+    out = xb - 2.0 * proj[..., None] * uh[:, None]
+    return out.reshape(x.shape)
+
+
 def ref_householder_gemm(x, w, u):
     """Fused (H_B W)ᵀx: y = reflect(x) @ W.  x: (T, d); w: (d, f)."""
     return ref_ether_reflect(x, u) @ w.astype(x.dtype)

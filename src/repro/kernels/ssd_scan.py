@@ -50,13 +50,15 @@ def _ssd_chunk_kernel(xv_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_chunk_pallas(xv, a, b, c, *, chunk: int = 128,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """Intra-chunk SSD. xv: (BH, S, P); a: (BH, S); b/c: (BH, S, N),
     already head-expanded. S % chunk == 0.
 
     Returns (y_intra (BH,S,P), states (BH,nc,N,P), decays (BH,nc)) — the
     caller runs the inter-chunk scan and adds C·(carried state) terms.
     """
+    from repro.core.execute import _interpret
+    interpret = _interpret(interpret)
     bh, s, p = xv.shape
     n = b.shape[-1]
     assert s % chunk == 0

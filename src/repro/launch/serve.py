@@ -6,15 +6,56 @@
 Serving modes:
 * ``--merged``: absorb adapters into the base weights (paper's
   zero-latency deployment, core.merge_params) and serve the plain model;
-* default: unmerged activation-side adapters — the multi-tenant path
-  (ETHER banks are tiny; thousands of per-client adapters fit in HBM,
-  see core.transforms.reflect_activation_batched).
+* default: unmerged activation-side adapters — per-step reflections on
+  the frozen weights;
+* ``--tenants N``: real multi-tenant serving (DESIGN.md §2). Builds an
+  N-tenant :class:`~repro.core.peft.AdapterBank`, assigns each request a
+  tenant id, and runs BOTH the unmerged-bank path (per-request batched
+  gather-and-reflect — one weight set, N tenants resident) and the
+  merged baseline (tenant 0 absorbed into the weights — zero-latency but
+  single-tenant), printing the decode-latency comparison.
+
+``--backend {jnp,pallas,auto}`` selects the execution backend for the
+ETHER hot ops (core.execute); ``auto`` uses the Pallas kernels whenever
+the shapes tile and is the serving default.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+
+
+def _timed_generation(prefill_fn, step_fn, params, adapters, batch, gen,
+                      tenant_ids=None):
+    """Run prefill + ``gen`` greedy decode steps; returns
+    (t_prefill_s, t_per_token_s, generated (B, gen+1)).
+
+    Warms up (compiles) both entry points before timing so the reported
+    numbers compare serving latency, not XLA compile time."""
+    import jax
+    import jax.numpy as jnp
+
+    cache, logits = prefill_fn(params, adapters, batch, tenant_ids)
+    wtok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    _, c2 = step_fn(params, adapters, cache, wtok, tenant_ids)
+    jax.tree_util.tree_leaves(c2)[0].block_until_ready()
+
+    t0 = time.perf_counter()
+    cache, logits = prefill_fn(params, adapters, batch, tenant_ids)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out_tokens = [tok]
+    t0 = time.perf_counter()
+    for _ in range(gen):
+        logits, cache = step_fn(params, adapters, cache, tok, tenant_ids)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out_tokens.append(tok)
+    tok.block_until_ready()
+    t_gen = time.perf_counter() - t0
+    return t_prefill, t_gen / gen, jnp.concatenate(out_tokens, axis=1)
 
 
 def main():
@@ -27,27 +68,31 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--merged", action="store_true")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="N>0: multi-tenant AdapterBank serving; compares "
+                         "merged vs unmerged-bank decode latency")
+    ap.add_argument("--backend", default="auto",
+                    choices=("jnp", "pallas", "auto"),
+                    help="execution backend for the ETHER hot ops")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     import jax
     import jax.numpy as jnp
     from repro.configs import get_config, peft_targets
-    from repro.core.peft import init_adapters, merge_params
+    from repro.core import execute
+    from repro.core.peft import (init_adapter_bank, init_adapters,
+                                 merge_params)
     from repro.core.transforms import PEFTConfig
     from repro.models import (EncDecConfig, decode_step, init_model,
                               prefill)
 
     cfg = get_config(args.arch, args.variant)
     peft = PEFTConfig(method=args.method, n_blocks=args.n_blocks,
-                      targets=peft_targets(args.arch))
+                      targets=peft_targets(args.arch),
+                      backend=args.backend)
     rng = jax.random.PRNGKey(args.seed)
     params = init_model(rng, cfg)
-    adapters = init_adapters(jax.random.fold_in(rng, 1), params, peft)
-
-    if args.merged:
-        params = merge_params(params, adapters, peft)
-        adapters, peft = None, None
 
     B, P = args.batch, args.prompt_len
     batch = {"tokens": jax.random.randint(
@@ -61,27 +106,67 @@ def main():
             jax.random.fold_in(rng, 3), (B, cfg.n_img_tokens,
                                          cfg.d_frontend), cfg.cdt())
 
-    t0 = time.perf_counter()
-    cache, logits = jax.jit(
-        lambda p, a, b: prefill(p, a, b, cfg, peft))(params, adapters, batch)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
+    def make_fns(peft_cfg):
+        pf = jax.jit(lambda p, a, b, i: prefill(p, a, b, cfg, peft_cfg,
+                                                tenant_ids=i))
+        st = jax.jit(lambda p, a, c, t, i: decode_step(p, a, c, t, cfg,
+                                                       peft_cfg,
+                                                       tenant_ids=i))
+        return pf, st
 
-    step = jax.jit(lambda p, a, c, t: decode_step(p, a, c, t, cfg, peft))
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    out_tokens = [tok]
-    t0 = time.perf_counter()
-    for _ in range(args.gen):
-        logits, cache = step(params, adapters, cache, tok)
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        out_tokens.append(tok)
-    tok.block_until_ready()
-    t_gen = time.perf_counter() - t0
+    if args.tenants > 0:
+        if args.method != "ether":
+            raise SystemExit("--tenants requires --method ether "
+                             "(AdapterBank is ETHER-only)")
+        if args.merged:
+            raise SystemExit("--merged conflicts with --tenants: the "
+                             "tenants mode already runs the merged "
+                             "baseline alongside the unmerged bank")
+        bank = init_adapter_bank(jax.random.fold_in(rng, 1), params, peft,
+                                 args.tenants)
+        kb = bank.size_bytes() / 1e3
+        print(f"adapter bank: {args.tenants} tenants = {kb:.1f} KB HBM "
+              f"({kb / args.tenants:.2f} KB/tenant)")
+        ids = jax.random.randint(jax.random.fold_in(rng, 4), (B,), 0,
+                                 args.tenants, jnp.int32)
+        print(f"request tenant ids: {ids.tolist()}")
 
-    gen = jnp.concatenate(out_tokens, axis=1)
+        # --- unmerged bank: one weight set serves all tenants ---
+        execute.reset_counters()
+        pf, st = make_fns(peft)
+        t_pre_u, t_tok_u, gen_u = _timed_generation(
+            pf, st, params, bank, batch, args.gen, tenant_ids=ids)
+        live = {k: v for k, v in execute.counters().items() if v}
+        print(f"[unmerged bank]  prefill: {t_pre_u*1e3:.1f} ms  "
+              f"decode: {t_tok_u*1e3:.2f} ms/token  "
+              f"(backends traced: {live})")
+
+        # --- merged baseline: tenant 0 absorbed, zero per-step cost,
+        #     but the weights can serve only that tenant ---
+        merged = merge_params(params, bank.select(0), peft)
+        pf_m, st_m = make_fns(None)
+        t_pre_m, t_tok_m, _ = _timed_generation(
+            pf_m, st_m, merged, None, batch, args.gen)
+        print(f"[merged t=0]     prefill: {t_pre_m*1e3:.1f} ms  "
+              f"decode: {t_tok_m*1e3:.2f} ms/token")
+        print(f"unmerged-bank overhead: "
+              f"{(t_tok_u / max(t_tok_m, 1e-9) - 1.0) * 100:+.1f}% "
+              f"per decoded token for {args.tenants}-tenant isolation")
+        print("generated:", gen_u[0].tolist())
+        return
+
+    adapters = init_adapters(jax.random.fold_in(rng, 1), params, peft)
+    if args.merged:
+        params = merge_params(params, adapters, peft)
+        adapters, peft = None, None
+
+    pf, st = make_fns(peft)
+    t_prefill, t_tok, gen = _timed_generation(pf, st, params, adapters,
+                                              batch, args.gen)
     print(f"prefill: {t_prefill*1e3:.1f} ms  "
-          f"decode: {t_gen/args.gen*1e3:.2f} ms/token "
-          f"({'merged' if args.merged else 'multi-tenant unmerged'})")
+          f"decode: {t_tok*1e3:.2f} ms/token "
+          f"({'merged' if args.merged else 'unmerged adapters'}, "
+          f"backend={args.backend})")
     print("generated:", gen[0].tolist())
 
 

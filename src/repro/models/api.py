@@ -80,10 +80,29 @@ def _chunked_ce_encdec(params, cfg, hidden, labels, mask):
     return jnp.sum((logz - gold) * m) / jnp.maximum(jnp.sum(m), 1.0)
 
 
+def _resolve_adapters(adapters, tenant_ids):
+    """Multi-tenant serving: an AdapterBank plus per-request tenant ids
+    becomes a request-scoped adapter tree (bank + ids at every module);
+    ordinary adapter trees pass through untouched."""
+    from repro.core.peft import AdapterBank
+    if isinstance(adapters, AdapterBank):
+        if tenant_ids is None:
+            raise ValueError("AdapterBank serving requires tenant_ids "
+                             "(one int32 id per batch row)")
+        return adapters.request(tenant_ids)
+    if tenant_ids is not None and adapters is not None:
+        raise ValueError("tenant_ids only applies to AdapterBank adapters")
+    return adapters
+
+
 def prefill(params: Params, adapters: Optional[Params], batch: dict, cfg,
-            peft: Optional[PEFTConfig]):
+            peft: Optional[PEFTConfig], tenant_ids=None):
     """Build serving caches from a full prompt; returns (cache,
-    last-position logits) — the serve_prefill entry the dry-run lowers."""
+    last-position logits) — the serve_prefill entry the dry-run lowers.
+
+    ``tenant_ids`` (B,) selects each request's adapter from an
+    AdapterBank passed as ``adapters`` (multi-tenant serving)."""
+    adapters = _resolve_adapters(adapters, tenant_ids)
     if isinstance(cfg, EncDecConfig):
         enc_out = encdec.encode(params, cfg, batch["frame_embeds"],
                                 adapters=adapters, peft=peft)
@@ -158,9 +177,14 @@ def _is_window_cache(path: str, cfg) -> bool:
 
 
 def decode_step(params: Params, adapters: Optional[Params], cache: Params,
-                tokens: jax.Array, cfg, peft: Optional[PEFTConfig]):
+                tokens: jax.Array, cfg, peft: Optional[PEFTConfig],
+                tenant_ids=None):
     """One serving step: (B,1) new tokens against the cache — the
-    serve_step entry the decode_32k / long_500k cells lower."""
+    serve_step entry the decode_32k / long_500k cells lower.
+
+    ``tenant_ids`` (B,) selects each request's adapter from an
+    AdapterBank passed as ``adapters`` (multi-tenant serving)."""
+    adapters = _resolve_adapters(adapters, tenant_ids)
     if isinstance(cfg, EncDecConfig):
         hidden, new_cache = encdec.decode(params, cfg, tokens, cache=cache,
                                           adapters=adapters, peft=peft,

@@ -43,7 +43,12 @@ def init_dense(rng, d_in: int, d_out: int, dtype, *, bias: bool = False,
 
 def dense(p: Params, x: jax.Array, *, adapter: Optional[Params] = None,
           peft: Optional[PEFTConfig] = None) -> jax.Array:
-    """y = adapted(W)ᵀx + b — the single PEFT attach point."""
+    """y = adapted(W)ᵀx + b — the single PEFT attach point.
+
+    ``peft.backend`` selects the execution backend (jnp / pallas / auto)
+    for the ETHER hot ops; dispatch happens inside ``adapted_dense`` via
+    ``core.execute``, so every model in the zoo inherits the kernel path
+    without signature changes here."""
     return adapted_dense(x, p["kernel"], p.get("bias"), adapter, peft)
 
 

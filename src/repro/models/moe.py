@@ -10,7 +10,12 @@ different mesh axes (EP over "model", tokens over "data"/"pod").
 
 ETHER on experts: adapters are stacked per-expert, shard with the expert
 axis, and are applied inside the vmapped expert MLP — per-expert
-hyperplane reflections (DESIGN.md §5).
+hyperplane reflections (DESIGN.md §5).  The execution backend rides in
+``peft.backend`` (DESIGN.md §3): Pallas kernels are vmap-safe (the
+batching rule prepends grid dims), so expert MLPs can hit the fused
+reflect-GEMM when capacity/d_ff tile.  Per-*tenant* AdapterBank serving
+is not available inside experts — capacity dispatch destroys the batch
+dim the bank gather keys on (adapted_dense raises).
 """
 
 from __future__ import annotations

@@ -16,7 +16,9 @@ happens back at the source shard. Both sorts are shard-local.
 
 Everything is differentiable (all_to_all transposes to all_to_all), so
 the same path serves ETHER-PEFT training; per-expert ETHER adapters ride
-along with the model-sharded expert banks.
+along with the model-sharded expert banks.  As in moe.py, the execution
+backend (jnp / pallas / auto) rides in ``peft.backend`` and dispatches
+inside adapted_dense — shard_map-local expert GEMMs included.
 """
 
 from __future__ import annotations

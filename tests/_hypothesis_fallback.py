@@ -1,0 +1,96 @@
+"""Minimal stand-in for ``hypothesis`` so the property tests still run
+(with a small deterministic example sweep) on machines where hypothesis
+is not installed.  Import via::
+
+    try:
+        import hypothesis
+        import hypothesis.strategies as st
+    except ImportError:
+        from _hypothesis_fallback import hypothesis, st
+
+Only the tiny API surface the test-suite uses is provided: ``given``
+with keyword strategies, ``settings`` (accepted and ignored), and the
+``integers`` / ``floats`` / ``sampled_from`` strategies.  Each strategy
+yields a deterministic spread of examples (bounds, midpoints, and a few
+hash-seeded interior points), and ``given`` runs the test once per
+zipped example tuple — not a replacement for real property testing, but
+it keeps the invariants exercised from a clean checkout.
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+_N_EXAMPLES = 5
+
+
+def _det(seed: str, i: int) -> float:
+    """Deterministic pseudo-random float in [0, 1)."""
+    h = hashlib.sha256(f"{seed}:{i}".encode()).digest()
+    return int.from_bytes(h[:8], "big") / 2**64
+
+
+class _Strategy:
+    def __init__(self, name: str, sample):
+        self._name = name
+        self._sample = sample          # (slot: float in [0,1)) -> value
+
+    def examples(self, n: int, salt: str):
+        out = []
+        for i in range(n):
+            # first two examples pin the extremes, rest spread interior
+            slot = (0.0 if i == 0 else 1.0 if i == 1
+                    else _det(f"{self._name}:{salt}", i))
+            out.append(self._sample(min(slot, 1.0 - 1e-12)))
+        return out
+
+
+def integers(lo: int, hi: int) -> _Strategy:
+    return _Strategy(f"int[{lo},{hi}]",
+                     lambda s: lo + int(s * (hi - lo + 1)))
+
+
+def floats(lo: float, hi: float) -> _Strategy:
+    return _Strategy(f"float[{lo},{hi}]", lambda s: lo + s * (hi - lo))
+
+
+def sampled_from(items) -> _Strategy:
+    seq = list(items)
+    return _Strategy(f"sampled{seq!r}",
+                     lambda s: seq[int(s * len(seq)) % len(seq)])
+
+
+class _HypothesisShim:
+    """Namespace mimicking the ``hypothesis`` module surface we use."""
+
+    @staticmethod
+    def settings(**_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    @staticmethod
+    def given(**strategies):
+        def deco(fn):
+            # zero-arg wrapper (no functools.wraps: pytest must not see
+            # the strategy parameters as fixture requests)
+            def runner():
+                names = sorted(strategies)
+                columns = [strategies[k].examples(_N_EXAMPLES, fn.__name__)
+                           for k in names]
+                for values in zip(*columns):
+                    fn(**dict(zip(names, values)))
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+        return deco
+
+
+class _StrategiesShim:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
+
+
+hypothesis = _HypothesisShim()
+st = _StrategiesShim()

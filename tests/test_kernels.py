@@ -8,6 +8,7 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.ether_reflect import ether_reflect_pallas
+from repro.kernels.ether_reflect_batched import ether_reflect_batched_pallas
 from repro.kernels.ether_merge import ether_merge_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.householder_gemm import householder_gemm_pallas
@@ -30,6 +31,46 @@ def test_ether_reflect_sweep(t, d, n, dtype):
     exp = ref.ref_ether_reflect(x, u)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(exp, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,d,n,A", [(4, 64, 128, 4, 6), (2, 128, 256, 8, 33),
+                                       (3, 32, 384, 12, 2)])
+def test_ether_reflect_batched_sweep(B, S, d, n, A, dtype):
+    """Per-tenant gather-and-reflect Pallas kernel vs the jnp oracle,
+    including ids that repeat and hit the bank's extremes."""
+    x = jax.random.normal(RNG, (B, S, d), dtype)
+    bank = jax.random.normal(jax.random.PRNGKey(1), (A, n, d // n),
+                             jnp.float32)
+    ids = jax.random.randint(jax.random.PRNGKey(2), (B,), 0, A, jnp.int32)
+    ids = ids.at[0].set(0).at[-1].set(A - 1)
+    out = ether_reflect_batched_pallas(x, bank, ids,
+                                       block_s=min(32, S), interpret=True)
+    exp = ref.ref_ether_reflect_batched(x, bank, ids)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **_tol(dtype))
+
+
+def test_ether_reflect_batched_matches_core_transform():
+    from repro.core.transforms import reflect_activation_batched
+    B, S, d, n, A = 4, 16, 256, 8, 7
+    x = jax.random.normal(RNG, (B, S, d))
+    bank = jax.random.normal(jax.random.PRNGKey(1), (A, n, d // n))
+    ids = jnp.array([6, 0, 3, 3], jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(ops.ether_reflect_batched(x, bank, ids)),
+        np.asarray(reflect_activation_batched(x, bank, ids)), atol=1e-5)
+
+
+def test_ether_reflect_batched_fallback_odd_shapes():
+    """Non-tileable S (prime) and d must fall back to the jnp ref."""
+    B, S, d, n, A = 2, 7, 30, 5, 4
+    x = jax.random.normal(RNG, (B, S, d))
+    bank = jax.random.normal(jax.random.PRNGKey(1), (A, n, d // n))
+    ids = jnp.array([3, 1], jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(ops.ether_reflect_batched(x, bank, ids, block_s=4)),
+        np.asarray(ref.ref_ether_reflect_batched(x, bank, ids)), atol=1e-5)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
