@@ -1,0 +1,178 @@
+"""Tracked kernel benchmark suite — one timing entry per registered
+(op, backend) pair in ``core.execute`` at serving shapes.
+
+    PYTHONPATH=src python -m benchmarks.run --suite kernels \
+        --json BENCH_kernels.json
+
+writes ``BENCH_kernels.json`` at the repo root so subsequent PRs have a
+perf trajectory to regress against.  Shapes follow the serving driver:
+decode batches B ∈ {1, 8, 32} (one token per sequence), prefill token
+counts T ∈ {512, 2048}, model dims d ∈ {1024, 4096}.
+
+Honest labeling off-TPU: the ``pallas`` backend runs the Python
+interpret-mode emulator there, which measures the emulator, not the
+kernel.  By default each (op, pallas) pair is therefore timed once, at
+the smallest serving shape, with ``"mode": "interpret"`` — enough to
+keep the one-entry-per-pair contract without minutes of emulation.
+``--include-interp`` times every shape in interpret mode; on a real TPU
+all shapes run compiled.  The ``jnp`` rows are the CPU-comparable
+numbers.
+
+The suite FAILS (SystemExit) if any registered (op, backend) pair ends
+up without a bench entry — CI runs it at ``--shapes tiny`` as a smoke.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._common import time_us
+from repro.core import execute
+from repro.kernels import ops  # noqa: F401 — populates the registry
+
+# (kind, dims): token ops get flat (T, d) activations, batched ops get
+# (B, S, d) request batches, merge ops only depend on the weight.
+SERVING_SHAPES = {
+    "decode": [dict(batch=b, tokens=1, d=d)
+               for b in (1, 8, 32) for d in (1024, 4096)],
+    "prefill": [dict(batch=4, tokens=t // 4, d=d)
+                for t in (512, 2048) for d in (1024, 4096)],
+}
+TINY_SHAPES = {
+    "decode": [dict(batch=b, tokens=1, d=256) for b in (1, 4)],
+    "prefill": [dict(batch=2, tokens=32, d=256)],
+}
+N_BLOCKS = 32          # db = d / 32 — the paper's LLaMA default
+BANK_TENANTS = 64      # resident adapters for the batched ops
+
+
+def _args_for(op: str, shape: dict):
+    """Build operands for one op at one serving shape (f = d)."""
+    import zlib
+    k = jax.random.PRNGKey(zlib.crc32(op.encode()) % (2 ** 31))
+    d = shape["d"]
+    n = min(N_BLOCKS, d)
+    db = d // n
+    b, s = shape["batch"], shape["tokens"]
+    t = b * s
+    u = jax.random.normal(jax.random.fold_in(k, 1), (n, db))
+    v = jax.random.normal(jax.random.fold_in(k, 2), (n, db))
+    w = jax.random.normal(jax.random.fold_in(k, 3), (d, d))
+    if op == "ether_reflect":
+        return (jax.random.normal(k, (t, d)), u)
+    if op == "householder_gemm":
+        return (jax.random.normal(k, (t, d)), w, u)
+    if op == "etherplus_gemm":
+        u2 = jax.random.normal(jax.random.fold_in(k, 4), (n, db))
+        v2 = jax.random.normal(jax.random.fold_in(k, 5), (n, db))
+        return (jax.random.normal(k, (t, d)), w, u, v, u2, v2)
+    if op == "ether_merge":
+        return (w, u)
+    if op == "etherplus_merge":
+        u2 = jax.random.normal(jax.random.fold_in(k, 4), (n, db))
+        v2 = jax.random.normal(jax.random.fold_in(k, 5), (n, db))
+        return (w, u, v, u2, v2)
+    x3 = jax.random.normal(k, (b, s, d))
+    bank = jax.random.normal(jax.random.fold_in(k, 6),
+                             (BANK_TENANTS, n, db))
+    ids = jax.random.randint(jax.random.fold_in(k, 7), (b,), 0,
+                             BANK_TENANTS, jnp.int32)
+    if op == "ether_reflect_batched":
+        return (x3, bank, ids)
+    if op == "householder_gemm_batched":
+        return (x3, w, bank, ids)
+    if op == "etherplus_reflect_batched":
+        vbank = jax.random.normal(jax.random.fold_in(k, 8),
+                                  (BANK_TENANTS, n, db))
+        return (x3, bank, vbank, ids)
+    raise KeyError(op)
+
+
+_MERGE_OPS = ("ether_merge", "etherplus_merge")
+
+
+def _shapes_for(op: str, shapes: dict) -> list[tuple[str, dict]]:
+    if op in _MERGE_OPS:
+        # weight-only ops: one entry per distinct d
+        seen, out = set(), []
+        for kind, cells in shapes.items():
+            for c in cells:
+                if c["d"] not in seen:
+                    seen.add(c["d"])
+                    out.append(("merge", dict(batch=1, tokens=1, d=c["d"])))
+        return out
+    return [(kind, c) for kind, cells in shapes.items() for c in cells]
+
+
+def _flops(op: str, shape: dict) -> int:
+    """Nominal FLOP count (GEMM-dominated ops only; 0 = bandwidth-bound)."""
+    d, t = shape["d"], shape["batch"] * shape["tokens"]
+    if "gemm" in op:
+        return 2 * t * d * d
+    return 0
+
+
+def run_suite(shapes: str = "serving", include_interp: bool = False,
+              iters: int | None = None) -> dict:
+    """Time every registered (op, backend) pair; returns the JSON payload.
+
+    Raises SystemExit if any registered pair has no entry (CI contract).
+    """
+    grid = SERVING_SHAPES if shapes == "serving" else TINY_SHAPES
+    on_tpu = jax.default_backend() == "tpu"
+    ops_in_registry = sorted({o for (o, _) in execute._REGISTRY})
+    entries = []
+    for op in ops_in_registry:
+        cells = _shapes_for(op, grid)
+        # smallest first so the emulated-pallas single entry is cheap
+        cells.sort(key=lambda kc: (kc[1]["d"],
+                                   kc[1]["batch"] * kc[1]["tokens"]))
+        for backend in sorted(execute.available(op)):
+            emulated = backend == "pallas" and not on_tpu
+            todo = cells
+            if emulated and not include_interp:
+                todo = cells[:1]
+            for kind, cell in todo:
+                args = _args_for(op, cell)
+                fn = jax.jit(lambda *a, _op=op, _be=backend:
+                             execute.dispatch(_op, _be, *a))
+                heavy = (shapes == "serving"
+                         and cell["d"] * cell["batch"] * cell["tokens"]
+                         >= 2**22)
+                it = iters or (3 if heavy else 10)
+                us = time_us(fn, *args, iters=it, warmup=1 if heavy else 2)
+                entries.append(dict(
+                    op=op, backend=backend, kind=kind,
+                    mode=("interpret" if emulated else
+                          "compiled" if backend == "pallas" else "xla"),
+                    shape=dict(cell), us_per_call=round(us, 2),
+                    gflops=round(_flops(op, cell) / max(us, 1e-9) / 1e3, 2),
+                ))
+    covered = {(e["op"], e["backend"]) for e in entries}
+    missing = sorted(set(execute._REGISTRY) - covered)
+    if missing:
+        raise SystemExit(f"kernel bench suite is missing entries for "
+                         f"registered ops: {missing}")
+    return dict(
+        suite="kernels", shapes=shapes, platform=jax.default_backend(),
+        jax=jax.__version__, n_blocks=N_BLOCKS, bank_tenants=BANK_TENANTS,
+        note=("pallas rows off-TPU are interpret-mode emulation (smallest "
+              "shape only unless --include-interp); jnp rows are the "
+              "CPU-comparable numbers"),
+        entries=entries,
+    )
+
+
+def run(include_interp: bool = False):
+    """benchmarks.run module protocol: CSV-row dicts (tiny shapes)."""
+    payload = run_suite(shapes="tiny", include_interp=include_interp)
+    return [dict(name=f"kernels/{e['op']}/{e['backend']}/{e['kind']}",
+                 us_per_call=e["us_per_call"],
+                 derived=f"{e['mode']} d={e['shape']['d']}")
+            for e in payload["entries"]]
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run_suite(shapes="tiny"), indent=1))

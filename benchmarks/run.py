@@ -1,10 +1,25 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV.
 """Benchmark harness — one module per paper table/figure plus the
-roofline report. ``python -m benchmarks.run [--only substr]``."""
+roofline report and the tracked kernel suite.
+
+    python -m benchmarks.run [--only substr]          # paper tables
+    python -m benchmarks.run --suite kernels \
+        --json BENCH_kernels.json                     # kernel suite
+
+The kernel suite times every (op, backend) pair registered in
+``core.execute`` at serving shapes and fails if any pair is missing an
+entry; ``--json`` writes the tracked ``BENCH_kernels.json`` payload
+(regenerate it at the repo root with exactly the command above).
+``--include-interp`` opts into timing Pallas interpret-mode rows off-TPU
+(they measure the Python emulator, not the kernel, and are skipped or
+minimized by default — the jnp rows are the CPU-comparable numbers).
+"""
 
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
 import sys
 import traceback
 
@@ -22,10 +37,41 @@ MODULES = [
 ]
 
 
+def _run_kernel_suite(args) -> None:
+    from benchmarks import kernels_suite
+    payload = kernels_suite.run_suite(shapes=args.shapes,
+                                      include_interp=args.include_interp)
+    print("name,us_per_call,derived")
+    for e in payload["entries"]:
+        s = e["shape"]
+        print(f"kernels/{e['op']}/{e['backend']}/{e['kind']}"
+              f"_b{s['batch']}x{s['tokens']}_d{s['d']},"
+              f"{e['us_per_call']:.1f},{e['mode']}", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {args.json} ({len(payload['entries'])} entries)",
+              file=sys.stderr)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--suite", default=None, choices=("kernels",),
+                    help="run a tracked suite instead of the paper tables")
+    ap.add_argument("--json", default=None,
+                    help="write the suite payload to this JSON file")
+    ap.add_argument("--shapes", default="serving",
+                    choices=("serving", "tiny"),
+                    help="kernel-suite shape grid (tiny = CI smoke)")
+    ap.add_argument("--include-interp", action="store_true",
+                    help="time Pallas interpret-mode rows off-TPU "
+                         "(measures the emulator; off by default)")
     args = ap.parse_args()
+    if args.suite == "kernels":
+        _run_kernel_suite(args)
+        return
     print("name,us_per_call,derived")
     failed = 0
     for modname in MODULES:
@@ -34,7 +80,10 @@ def main() -> None:
         try:
             import importlib
             mod = importlib.import_module(modname)
-            for row in mod.run():
+            kwargs = {}
+            if "include_interp" in inspect.signature(mod.run).parameters:
+                kwargs["include_interp"] = args.include_interp
+            for row in mod.run(**kwargs):
                 d = str(row.get("derived", "")).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']:.1f},{d}",
                       flush=True)

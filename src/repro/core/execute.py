@@ -10,9 +10,12 @@ The registry maps ``(op, backend)`` to an implementation:
 
 ``pallas``
     The TPU kernels in ``repro.kernels`` (``ether_reflect``,
-    ``householder_gemm``, ``ether_merge``, ``ether_reflect_batched``).
-    Off-TPU the kernels run in interpret mode (Python emulation) so the
-    identical code path is validated on CPU and deployed on TPU.
+    ``householder_gemm``, ``ether_merge``, ``ether_reflect_batched``,
+    and the fused ETHER+/multi-tenant tier: ``etherplus_gemm``,
+    ``householder_gemm_batched``, ``etherplus_reflect_batched``,
+    ``etherplus_merge``).  Off-TPU the kernels run in interpret mode
+    (Python emulation) so the identical code path is validated on CPU
+    and deployed on TPU.
 
 ``auto``
     Per-call selection: ``pallas`` when the operand shapes satisfy the
@@ -136,7 +139,44 @@ def reset_counters() -> None:
 # Tileability predicates — mirror the fallback logic in kernels.ops so
 # `auto` selects pallas exactly when the wrapper would not itself fall
 # back to the jnp reference.
+#
+# The ETHER+/batched-GEMM tier relaxes the 128-lane constraint off-TPU:
+# interpret mode (the only Pallas execution path on CPU/GPU) has no lane
+# tiling, so `auto` can keep serving-shape smoke configs (d_model=96) on
+# the kernel path there, while real TPUs still require 128-aligned
+# feature dims.  The original rank-1 op rules are unchanged.
 # ---------------------------------------------------------------------------
+
+def lane_ok(dim: int) -> bool:
+    """Feature-dim lane constraint: 128-aligned on a real TPU; interpret
+    mode (off-TPU emulation) has no lane tiling."""
+    return dim % 128 == 0 or jax.default_backend() != "tpu"
+
+
+def gemm_tiles(t: int, d: int, f: int, db: int,
+               db_out: int | None = None) -> tuple[int, int, int]:
+    """(block_m, block_f, block_k) for the fused reflect-GEMM kernels;
+    any zero means the shapes don't tile and callers must fall back.
+
+    ``db_out`` (two-sided ETHER+ only) adds the fused-epilogue
+    constraint block_f % db_out == 0: each F-tile must hold whole
+    *output* reflection blocks so the epilogue's blockwise projection is
+    tile-local.  On a real TPU the minor dims (block_k for the x tile,
+    block_f for the w/out tiles) must be 128-lane aligned; interpret
+    mode has no lane constraint.  Small row tiles (S=1 decode) are fine
+    everywhere — sublanes pad."""
+    bm = 128 if t % 128 == 0 else (t if 0 < t <= 256 else 0)
+    if f % 128 == 0 and (db_out is None or 128 % db_out == 0):
+        bf = 128
+    elif 0 < f <= 512 and lane_ok(f):
+        bf = f                      # whole rows: db_out | f always holds
+    else:
+        bf = 0
+    bk = db * max(1, min(512, d) // db)
+    if d % bk or not lane_ok(bk):
+        bk = 0
+    return bm, bf, bk
+
 
 @supports_rule("ether_reflect")
 def _sup_reflect(x, u) -> bool:
@@ -171,6 +211,53 @@ def _sup_reflect_batched(x, u_bank, ids) -> bool:
     bs = min(128, s)
     # lane-dim friendliness on real TPUs: the feature dim must tile.
     return bs > 0 and s % bs == 0 and d % 128 == 0 and n * db == d
+
+
+@supports_rule("etherplus_gemm")
+def _sup_ep_gemm(x, w, u1, v1, u2=None, v2=None) -> bool:
+    d, f = w.shape
+    t = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
+    n, db = u1.shape
+    if n * db != d:
+        return False
+    db_out = u2.shape[1] if u2 is not None else None
+    bm, bf, bk = gemm_tiles(t, d, f, db, db_out)
+    return bool(bm and bf and bk)
+
+
+@supports_rule("householder_gemm_batched")
+def _sup_hh_gemm_batched(x, w, u_bank, ids) -> bool:
+    if x.ndim != 3:
+        return False
+    _, s, d = x.shape
+    _, f = w.shape
+    _, n, db = u_bank.shape
+    if n * db != d:
+        return False
+    bs, bf, bk = gemm_tiles(s, d, f, db)
+    return bool(bs and bf and bk)
+
+
+@supports_rule("etherplus_reflect_batched")
+def _sup_ep_reflect_batched(x, u_bank, v_bank, ids) -> bool:
+    if x.ndim != 3:
+        return False
+    _, s, d = x.shape
+    _, n, db = u_bank.shape
+    bs = min(128, s)
+    return (bs > 0 and s % bs == 0 and n * db == d
+            and u_bank.shape == v_bank.shape and lane_ok(d))
+
+
+@supports_rule("etherplus_merge")
+def _sup_ep_merge(w, u1, v1, u2=None, v2=None) -> bool:
+    d, f = w.shape
+    n, db = u1.shape
+    if n * db != d or u1.shape != v1.shape:
+        return False
+    right_ok = u2 is None or (lane_ok(u2.shape[1]) and u2.shape == v2.shape
+                              and u2.shape[0] * u2.shape[1] == f)
+    return lane_ok(f) and right_ok
 
 
 # ---------------------------------------------------------------------------
@@ -260,3 +347,69 @@ def _reflect_batched_pallas(x, u_bank, ids):
 
 register("ether_reflect_batched", "pallas")(
     _with_ref_vjp(_reflect_batched_pallas, _reflect_batched_jnp))
+
+
+@register("etherplus_gemm", "jnp")
+def _ep_gemm_jnp(x, w, u1, v1, u2=None, v2=None):
+    from repro.core.transforms import etherplus_activation
+    y = etherplus_activation(x, u1, v1) @ w.astype(x.dtype)
+    if u2 is not None:
+        y = etherplus_activation(y, u2, v2)
+    return y
+
+
+def _ep_gemm_pallas(x, w, u1, v1, u2=None, v2=None):
+    from repro.kernels import ops
+    return ops.etherplus_gemm(x, w, u1, v1, u2, v2)
+
+
+register("etherplus_gemm", "pallas")(
+    _with_ref_vjp(_ep_gemm_pallas, _ep_gemm_jnp))
+
+
+@register("householder_gemm_batched", "jnp")
+def _hh_gemm_batched_jnp(x, w, u_bank, ids):
+    from repro.core.transforms import reflect_activation_batched
+    return reflect_activation_batched(x, u_bank, ids) @ w.astype(x.dtype)
+
+
+def _hh_gemm_batched_pallas(x, w, u_bank, ids):
+    from repro.kernels import ops
+    return ops.householder_gemm_batched(x, w, u_bank, ids)
+
+
+register("householder_gemm_batched", "pallas")(
+    _with_ref_vjp(_hh_gemm_batched_pallas, _hh_gemm_batched_jnp))
+
+
+@register("etherplus_reflect_batched", "jnp")
+def _ep_reflect_batched_jnp(x, u_bank, v_bank, ids):
+    from repro.core.transforms import etherplus_activation_batched
+    return etherplus_activation_batched(x, u_bank, v_bank, ids)
+
+
+def _ep_reflect_batched_pallas(x, u_bank, v_bank, ids):
+    from repro.kernels import ops
+    return ops.etherplus_reflect_batched(x, u_bank, v_bank, ids)
+
+
+register("etherplus_reflect_batched", "pallas")(
+    _with_ref_vjp(_ep_reflect_batched_pallas, _ep_reflect_batched_jnp))
+
+
+@register("etherplus_merge", "jnp")
+def _ep_merge_jnp(w, u1, v1, u2=None, v2=None):
+    from repro.core.transforms import etherplus_weight
+    out = etherplus_weight(w, u1, v1)
+    if u2 is not None:
+        out = etherplus_weight(out, u2, v2, side="right")
+    return out
+
+
+def _ep_merge_pallas(w, u1, v1, u2=None, v2=None):
+    from repro.kernels import ops
+    return ops.etherplus_merge(w, u1, v1, u2, v2)
+
+
+register("etherplus_merge", "pallas")(
+    _with_ref_vjp(_ep_merge_pallas, _ep_merge_jnp))

@@ -149,11 +149,16 @@ class AdapterBank:
     of tenants cost a few MB of HBM — the property that makes this
     viable where multi-LoRA banks are not (DESIGN.md §2).
 
-    Only ``method='ether'`` with ``mode='activation'`` is bank-servable
-    (the batched reflection gathers per-request hyperplanes); modules
-    whose inputs lose the batch dim (MoE expert dispatch) cannot carry
-    per-request adapters and raise at trace time.
+    ``method='ether'`` and ``method='etherplus'`` with
+    ``mode='activation'`` are bank-servable (the batched kernels gather
+    per-request hyperplanes — for ETHER+ the u1/v1/u2/v2 leaves are all
+    stacked on the tenant axis and the two-sided H̃⁺ bank applies on the
+    output features); modules whose inputs lose the batch dim (MoE
+    expert dispatch) cannot carry per-request adapters and raise at
+    trace time.
     """
+
+    BANK_METHODS = ("ether", "etherplus")
 
     def __init__(self, tree: Params, tenants: int,
                  stack_ndims: dict[str, int]):
@@ -165,9 +170,9 @@ class AdapterBank:
     def stack(cls, trees: list, params: Params,
               cfg: PEFTConfig) -> "AdapterBank":
         """Stack N standard adapter trees (each mirroring ``params``)."""
-        if cfg.method != "ether":
-            raise ValueError("AdapterBank supports method='ether' only "
-                             f"(got {cfg.method!r})")
+        if cfg.method not in cls.BANK_METHODS:
+            raise ValueError(f"AdapterBank supports {cls.BANK_METHODS} "
+                             f"only (got {cfg.method!r})")
         if not trees:
             raise ValueError("need at least one tenant tree")
         stack_ndims = {

@@ -160,6 +160,27 @@ def etherplus_activation(x: jax.Array, u: jax.Array,
     return _deblockify(xb)
 
 
+def etherplus_activation_batched(x: jax.Array, u_bank: jax.Array,
+                                 v_bank: jax.Array,
+                                 ids: jax.Array) -> jax.Array:
+    """Multi-tenant ETHER+ serving: per-sequence rank-2 updates from a
+    bank pair.
+
+    x: (B, S, d); u_bank/v_bank: (num_adapters, n, db); ids: (B,) int32.
+    The batched analogue of :func:`etherplus_activation` — both
+    projections read the original x.  Gathers each request's vectors
+    FIRST, then normalizes: O(B·d) per call, not O(num_adapters·d).
+    """
+    _, n, db = u_bank.shape
+    u = _unit(u_bank[ids]).astype(x.dtype)            # (B, n, db)
+    v = _unit(v_bank[ids]).astype(x.dtype)
+    xb = _blockify(x, n)                              # (B, S, n, db)
+    pu = jnp.einsum("bsnd,bnd->bsn", xb, u)
+    pv = jnp.einsum("bsnd,bnd->bsn", xb, v)
+    xb = xb - pu[..., None] * u[:, None] + pv[..., None] * v[:, None]
+    return _deblockify(xb)
+
+
 def etherplus_weight(W: jax.Array, u: jax.Array, v: jax.Array,
                      side: str = "left") -> jax.Array:
     """Blockwise ``H⁺W`` (side='left') or ``W H̃⁺`` (side='right') as a
@@ -326,19 +347,12 @@ def adapted_dense(x: jax.Array, W: jax.Array, b: Optional[jax.Array],
         if "ids" in adapter:
             # Multi-tenant bank (core.peft.AdapterBank): u is the whole
             # (num_adapters, n, db) bank; each batch row reflects with
-            # its own tenant's hyperplanes (DESIGN.md §2).
-            if cfg.mode != "activation":
-                raise ValueError(
-                    "AdapterBank serving requires mode='activation' "
-                    f"(got {cfg.mode!r}); merge a single tenant via "
-                    "bank.select(i) + merge_params instead")
-            if x.ndim != 3 or x.shape[0] != adapter["ids"].shape[0]:
-                raise ValueError(
-                    f"bank adapters need per-request (B, S, d) inputs; "
-                    f"got x {x.shape} for ids {adapter['ids'].shape}")
-            xr = execute.dispatch("ether_reflect_batched", cfg.backend,
-                                  x, u, adapter["ids"])
-            y = xr @ W.astype(x.dtype)
+            # its own tenant's hyperplanes (DESIGN.md §2). The fused
+            # batched kernel gathers + reflects inside the GEMM k-loop,
+            # so reflected activations never round-trip through HBM.
+            _check_bank_inputs(x, adapter, cfg)
+            y = execute.dispatch("householder_gemm_batched", cfg.backend,
+                                 x, W, u, adapter["ids"])
         elif cfg.mode == "activation":
             y = execute.dispatch("householder_gemm", cfg.backend, x, W, u)
         elif cfg.mode == "weight":
@@ -349,11 +363,25 @@ def adapted_dense(x: jax.Array, W: jax.Array, b: Optional[jax.Array],
             y = x @ block_diag_matmul(H, W).astype(x.dtype)
     elif m == "etherplus":
         u1, v1 = adapter["u1"], adapter["v1"]
-        if cfg.mode == "activation":
-            # H⁺x = x − û(ûᵀx) + v̂(v̂ᵀx): one rank-2 blockwise update.
-            y = etherplus_activation(x, u1, v1) @ W.astype(x.dtype)
-            if cfg.two_sided:
-                y = etherplus_activation(y, adapter["u2"], adapter["v2"])
+        u2, v2 = _etherplus_pair(adapter, cfg)
+        if "ids" in adapter:
+            # ETHER+ bank serving: per-request rank-2 gather-reflect on
+            # the input side, shared frozen GEMM, then the output-side
+            # H̃⁺ bank reflect (u2/v2 stacked on the tenant axis).
+            _check_bank_inputs(x, adapter, cfg)
+            ids = adapter["ids"]
+            xr = execute.dispatch("etherplus_reflect_batched", cfg.backend,
+                                  x, u1, v1, ids)
+            y = xr @ W.astype(x.dtype)
+            if u2 is not None:
+                y = execute.dispatch("etherplus_reflect_batched",
+                                     cfg.backend, y, u2, v2, ids)
+        elif cfg.mode == "activation":
+            # Fused rank-2 kernel: H⁺x applied inside the GEMM k-loop,
+            # H̃⁺ as an epilogue on the accumulator (one HBM round-trip
+            # of activations instead of three).
+            y = execute.dispatch("etherplus_gemm", cfg.backend,
+                                 x, W, u1, v1, u2, v2)
         else:
             Wt = merge_weight(W, adapter, cfg,
                               literal=(cfg.mode == "blockgemm"))
@@ -384,6 +412,36 @@ def adapted_dense(x: jax.Array, W: jax.Array, b: Optional[jax.Array],
     else:
         raise ValueError(m)
     return y if b is None else y + b.astype(x.dtype)
+
+
+def _etherplus_pair(adapter: Params, cfg: PEFTConfig):
+    """(u2, v2) for a two-sided config, (None, None) for one-sided.
+
+    A two-sided config over an adapter trained WITHOUT u2/v2 is a
+    config/checkpoint mismatch — fail loudly rather than silently
+    serving the one-sided transform."""
+    if not cfg.two_sided:
+        return None, None
+    if "u2" not in adapter or "v2" not in adapter:
+        raise ValueError(
+            "PEFTConfig.two_sided=True but the ETHER+ adapter has no "
+            "u2/v2 leaves (trained one-sided?); set two_sided=False to "
+            "serve it as-is")
+    return adapter["u2"], adapter["v2"]
+
+
+def _check_bank_inputs(x: jax.Array, adapter: Params,
+                       cfg: PEFTConfig) -> None:
+    """Shared AdapterBank trace-time validation (ether and etherplus)."""
+    if cfg.mode != "activation":
+        raise ValueError(
+            "AdapterBank serving requires mode='activation' "
+            f"(got {cfg.mode!r}); merge a single tenant via "
+            "bank.select(i) + merge_params instead")
+    if x.ndim != 3 or x.shape[0] != adapter["ids"].shape[0]:
+        raise ValueError(
+            f"bank adapters need per-request (B, S, d) inputs; "
+            f"got x {x.shape} for ids {adapter['ids'].shape}")
 
 
 def _square_blocks(adapter: Params, method: str) -> jax.Array:
@@ -419,17 +477,16 @@ def merge_weight(W: jax.Array, adapter: Optional[Params], cfg: PEFTConfig,
             HL = (householder_blocks(adapter["u1"], coeff=1.0, sign=-1.0),
                   householder_blocks(adapter["v1"], coeff=1.0, sign=+1.0))
             Wt = block_diag_matmul(_addmul(HL), W)
-        else:
-            Wt = etherplus_weight(W, adapter["u1"], adapter["v1"])
-        if cfg.two_sided:
-            if literal:
+            if cfg.two_sided:
                 HR = (householder_blocks(adapter["u2"], coeff=1.0, sign=-1.0),
                       householder_blocks(adapter["v2"], coeff=1.0, sign=+1.0))
                 Wt = block_diag_matmul(_addmul(HR), Wt, side="right")
-            else:
-                Wt = etherplus_weight(Wt, adapter["u2"], adapter["v2"],
-                                      side="right")
-        return Wt
+            return Wt
+        # kernel-backed absorption: one op covers both sides, so merged
+        # deployment is counted/dispatched like the `ether` branch.
+        u2, v2 = _etherplus_pair(adapter, cfg)
+        return execute.dispatch("etherplus_merge", cfg.backend, W,
+                                adapter["u1"], adapter["v1"], u2, v2)
     if m in ("oft", "naive"):
         return block_diag_matmul(_square_blocks(adapter, m), W)
     if m == "lora":

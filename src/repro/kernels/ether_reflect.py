@@ -45,8 +45,12 @@ def ether_reflect_pallas(x: jax.Array, u: jax.Array, *, block_t: int = 256,
     t, d = x.shape
     n, db = u.shape
     assert n * db == d, (n, db, d)
+    # Largest divisor of t that is <= block_t: direct callers and odd
+    # decode shapes (t not a multiple of 256) must not crash — the grid
+    # just gets more, smaller row-tiles.
     block_t = min(block_t, t)
-    assert t % block_t == 0, "caller pads tokens to a multiple of block_t"
+    while t % block_t:
+        block_t -= 1
     grid = (t // block_t,)
     return pl.pallas_call(
         functools.partial(_reflect_kernel, n=n, db=db),

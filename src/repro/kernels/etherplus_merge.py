@@ -1,0 +1,105 @@
+"""Pallas TPU kernels: ETHER+ weight absorption W' = H⁺_L W H̃⁺_R.
+
+Merged-deployment counterpart of ``ether_merge`` for the rank-2 variant
+(satellite of the fused-GEMM tier): the left kernel applies the blockwise
+rank-2 update on the input dim (one grid step = one (db × Tf) tile of W
+with its block's u/v pair), the right kernel applies it on the output
+dim (one grid step = one (Td × db_out) tile).  O(d·f) each, independent
+of n — same accounting as the rank-1 merge ("Identity 2", DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _merge_left_kernel(u_ref, v_ref, w_ref, o_ref):
+    u = u_ref[...].astype(jnp.float32)                       # (1, db)
+    v = v_ref[...].astype(jnp.float32)
+    un = u / (jnp.sqrt(jnp.sum(u * u)) + 1e-8)
+    vn = v / (jnp.sqrt(jnp.sum(v * v)) + 1e-8)
+    w = w_ref[...].astype(jnp.float32)                       # (db, Tf)
+    dot = lambda a: jax.lax.dot_general(
+        a, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (1, Tf)
+    pu, pv = dot(un), dot(vn)
+    o_ref[...] = (w - un[0][:, None] * pu[0][None, :]
+                  + vn[0][:, None] * pv[0][None, :]).astype(o_ref.dtype)
+
+
+def _merge_right_kernel(u_ref, v_ref, w_ref, o_ref):
+    u = u_ref[...].astype(jnp.float32)                       # (1, db_out)
+    v = v_ref[...].astype(jnp.float32)
+    un = u / (jnp.sqrt(jnp.sum(u * u)) + 1e-8)
+    vn = v / (jnp.sqrt(jnp.sum(v * v)) + 1e-8)
+    w = w_ref[...].astype(jnp.float32)                       # (Td, db_out)
+    pu = jnp.sum(w * un, axis=-1, keepdims=True)             # (Td, 1) = Wû
+    pv = jnp.sum(w * vn, axis=-1, keepdims=True)
+    o_ref[...] = (w - pu * un + pv * vn).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_f", "interpret"))
+def etherplus_merge_left_pallas(w: jax.Array, u: jax.Array, v: jax.Array,
+                                *, block_f: int = 512,
+                                interpret: bool | None = None) -> jax.Array:
+    """w: (d, f); u/v: (n, db), n*db == d. Returns H⁺_B w."""
+    from repro.core.execute import _interpret
+    interpret = _interpret(interpret)
+    d, f = w.shape
+    n, db = u.shape
+    assert n * db == d and u.shape == v.shape
+    # lane-aligned tile when f allows it (TPU requirement); the
+    # largest-divisor shrink is an interpret-only escape hatch.
+    if f % 512 == 0:
+        block_f = min(block_f, 512)
+    elif f % 128 == 0:
+        block_f = min(block_f, 128)
+    else:
+        block_f = min(block_f, f)
+        while f % block_f:
+            block_f -= 1
+    grid = (n, f // block_f)
+    return pl.pallas_call(
+        _merge_left_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, db), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, db), lambda i, j: (i, 0)),
+            pl.BlockSpec((db, block_f), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((db, block_f), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, f), w.dtype),
+        interpret=interpret,
+    )(u, v, w)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def etherplus_merge_right_pallas(w: jax.Array, u: jax.Array, v: jax.Array,
+                                 *, block_d: int = 256,
+                                 interpret: bool | None = None) -> jax.Array:
+    """w: (d, f); u/v: (n_out, db_out), n_out*db_out == f. Returns w H̃⁺_B."""
+    from repro.core.execute import _interpret
+    interpret = _interpret(interpret)
+    d, f = w.shape
+    n, db = u.shape
+    assert n * db == f and u.shape == v.shape
+    block_d = min(block_d, d)
+    while d % block_d:
+        block_d -= 1
+    grid = (d // block_d, n)
+    return pl.pallas_call(
+        _merge_right_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, db), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, db), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_d, db), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_d, db), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, f), w.dtype),
+        interpret=interpret,
+    )(u, v, w)

@@ -11,13 +11,20 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.execute import _interpret
+from repro.core.execute import _interpret, gemm_tiles, lane_ok
 from repro.kernels import ref
 from repro.kernels.ether_reflect import ether_reflect_pallas
 from repro.kernels.ether_reflect_batched import ether_reflect_batched_pallas
 from repro.kernels.ether_merge import ether_merge_pallas
+from repro.kernels.etherplus_gemm import etherplus_gemm_pallas
+from repro.kernels.etherplus_merge import (etherplus_merge_left_pallas,
+                                           etherplus_merge_right_pallas)
+from repro.kernels.etherplus_reflect_batched import (
+    etherplus_reflect_batched_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.householder_gemm import householder_gemm_pallas
+from repro.kernels.householder_gemm_batched import (
+    householder_gemm_batched_pallas)
 
 
 def ether_reflect(x: jax.Array, u: jax.Array, *, block_t: int = 256,
@@ -68,6 +75,78 @@ def householder_gemm(x: jax.Array, w: jax.Array, u: jax.Array, *,
                                   block_k=bk,
                                   interpret=_interpret(interpret))
     return out.reshape(*lead, f)
+
+
+def etherplus_gemm(x: jax.Array, w: jax.Array, u1: jax.Array,
+                   v1: jax.Array, u2: jax.Array | None = None,
+                   v2: jax.Array | None = None, *,
+                   interpret: bool | None = None) -> jax.Array:
+    """Fused rank-2 ETHER+ linear: (H⁺x) @ w, with the two-sided H̃⁺
+    epilogue when u2/v2 are given.  x: (..., d); w: (d, f)."""
+    import math
+    d, f = w.shape
+    lead = x.shape[:-1]
+    t = math.prod(lead) if lead else 1
+    x2 = x.reshape(t, d)
+    n, db = u1.shape
+    db_out = u2.shape[1] if u2 is not None else None
+    bm, bf, bk = gemm_tiles(t, d, f, db, db_out)
+    if n * db != d or not (bm and bf and bk):
+        return ref.ref_etherplus_gemm(x2, w, u1, v1, u2, v2
+                                      ).reshape(*lead, f)
+    out = etherplus_gemm_pallas(x2, w, u1, v1, u2, v2, block_m=bm,
+                                block_f=bf, block_k=bk,
+                                interpret=_interpret(interpret))
+    return out.reshape(*lead, f)
+
+
+def householder_gemm_batched(x: jax.Array, w: jax.Array,
+                             u_bank: jax.Array, ids: jax.Array, *,
+                             interpret: bool | None = None) -> jax.Array:
+    """Fused tenant-gather + reflect + GEMM. x: (B, S, d); w: (d, f);
+    u_bank: (A, n, db); ids: (B,). Falls back to the jnp ref for
+    non-tileable shapes."""
+    _, s, d = x.shape
+    _, f = w.shape
+    _, n, db = u_bank.shape
+    bs, bf, bk = gemm_tiles(s, d, f, db)
+    if n * db != d or not (bs and bf and bk):
+        return ref.ref_householder_gemm_batched(x, w, u_bank, ids)
+    return householder_gemm_batched_pallas(x, w, u_bank, ids, block_s=bs,
+                                           block_f=bf, block_k=bk,
+                                           interpret=interpret)
+
+
+def etherplus_reflect_batched(x: jax.Array, u_bank: jax.Array,
+                              v_bank: jax.Array, ids: jax.Array, *,
+                              block_s: int = 128,
+                              interpret: bool | None = None) -> jax.Array:
+    """Per-tenant gather + rank-2 ETHER+ reflect. x: (B, S, d);
+    u_bank/v_bank: (A, n, db); ids: (B,). Falls back to the jnp ref for
+    non-tileable shapes."""
+    _, s, d = x.shape
+    _, n, db = u_bank.shape
+    bs = min(block_s, s)
+    if bs == 0 or s % bs or n * db != d or not lane_ok(d):
+        return ref.ref_etherplus_reflect_batched(x, u_bank, v_bank, ids)
+    return etherplus_reflect_batched_pallas(x, u_bank, v_bank, ids,
+                                            block_s=bs, interpret=interpret)
+
+
+def etherplus_merge(w: jax.Array, u1: jax.Array, v1: jax.Array,
+                    u2: jax.Array | None = None,
+                    v2: jax.Array | None = None, *,
+                    interpret: bool | None = None) -> jax.Array:
+    """ETHER+ absorption W' = H⁺_L W (H̃⁺_R when u2/v2 given). w: (d, f)."""
+    from repro.core import execute
+    if not execute.supports("etherplus_merge", w, u1, v1, u2, v2):
+        return ref.ref_etherplus_merge(w, u1, v1, u2, v2)
+    out = etherplus_merge_left_pallas(w, u1, v1,
+                                      interpret=_interpret(interpret))
+    if u2 is not None:
+        out = etherplus_merge_right_pallas(out, u2, v2,
+                                           interpret=_interpret(interpret))
+    return out
 
 
 def ether_merge(w: jax.Array, u: jax.Array, *,

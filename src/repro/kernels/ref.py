@@ -41,6 +41,79 @@ def ref_householder_gemm(x, w, u):
     return ref_ether_reflect(x, u) @ w.astype(x.dtype)
 
 
+def ref_householder_gemm_batched(x, w, u_bank, ids):
+    """Fused tenant-gather + reflect + GEMM.  x: (B, S, d); w: (d, f);
+    u_bank: (A, n, db); ids: (B,) int32."""
+    return ref_ether_reflect_batched(x, u_bank, ids) @ w.astype(x.dtype)
+
+
+def _rank2(xb, u, v, dtype):
+    """Blockwise rank-2 update x − û(ûᵀx) + v̂(v̂ᵀx) on (..., n, db)."""
+    uh = (u / (jnp.linalg.norm(u, axis=-1, keepdims=True) + 1e-8)
+          ).astype(dtype)
+    vh = (v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-8)
+          ).astype(dtype)
+    pu = jnp.einsum("...nb,nb->...n", xb, uh)
+    pv = jnp.einsum("...nb,nb->...n", xb, vh)
+    return xb - pu[..., None] * uh + pv[..., None] * vh
+
+
+def ref_etherplus_reflect(x, u, v):
+    """Blockwise rank-2 H⁺x = x − û(ûᵀx) + v̂(v̂ᵀx) on the last dim.
+
+    x: (..., d); u/v: (n, db), d = n*db. Both projections read the
+    original x (true rank-2, not two sequential reflections)."""
+    n, db = u.shape
+    xb = x.reshape(*x.shape[:-1], n, db)
+    return _rank2(xb, u, v, x.dtype).reshape(x.shape)
+
+
+def ref_etherplus_gemm(x, w, u1, v1, u2=None, v2=None):
+    """Fused ETHER+ adapted linear: y = (H⁺_B x) @ W, then the two-sided
+    output reflection y H̃⁺_B when u2/v2 are given.  x: (T, d); w: (d, f);
+    u1/v1: (n, db); u2/v2: (n_out, db_out) or None."""
+    y = ref_etherplus_reflect(x, u1, v1) @ w.astype(x.dtype)
+    if u2 is not None:
+        y = ref_etherplus_reflect(y, u2, v2)
+    return y
+
+
+def ref_etherplus_reflect_batched(x, u_bank, v_bank, ids):
+    """Per-tenant gather + rank-2 reflect. x: (B, S, d); u_bank/v_bank:
+    (A, n, db); ids: (B,) int32."""
+    _, n, db = u_bank.shape
+    u = u_bank[ids]                                           # (B, n, db)
+    v = v_bank[ids]
+    uh = (u / (jnp.linalg.norm(u, axis=-1, keepdims=True) + 1e-8)
+          ).astype(x.dtype)
+    vh = (v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-8)
+          ).astype(x.dtype)
+    xb = x.reshape(*x.shape[:-1], n, db)
+    pu = jnp.einsum("bsnd,bnd->bsn", xb, uh)
+    pv = jnp.einsum("bsnd,bnd->bsn", xb, vh)
+    out = xb - pu[..., None] * uh[:, None] + pv[..., None] * vh[:, None]
+    return out.reshape(x.shape)
+
+
+def ref_etherplus_merge(w, u1, v1, u2=None, v2=None):
+    """ETHER+ absorption W' = H⁺_L W (H̃⁺_R when u2/v2 given). w: (d, f)."""
+    n, db = u1.shape
+    d, f = w.shape
+    wb = w.reshape(n, db, f)
+    uh = (u1 / (jnp.linalg.norm(u1, axis=-1, keepdims=True) + 1e-8)
+          ).astype(w.dtype)
+    vh = (v1 / (jnp.linalg.norm(v1, axis=-1, keepdims=True) + 1e-8)
+          ).astype(w.dtype)
+    pu = jnp.einsum("nb,nbf->nf", uh, wb)
+    pv = jnp.einsum("nb,nbf->nf", vh, wb)
+    out = (wb - uh[:, :, None] * pu[:, None, :]
+           + vh[:, :, None] * pv[:, None, :]).reshape(d, f)
+    if u2 is not None:
+        n2, db2 = u2.shape
+        out = _rank2(out.reshape(d, n2, db2), u2, v2, w.dtype).reshape(d, f)
+    return out
+
+
 def ref_ether_merge(w, u):
     """Weight-side block-diagonal reflection W' = H_B W. w: (d, f)."""
     n, db = u.shape

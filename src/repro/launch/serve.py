@@ -15,6 +15,17 @@ Serving modes:
   merged baseline (tenant 0 absorbed into the weights — zero-latency but
   single-tenant), printing the decode-latency comparison.
 
+``--method`` is threaded through prefill/decode for every mode. Banks
+serve both transform variants:
+
+* ``--method ether`` (rank-1): the fused ``householder_gemm_batched``
+  kernel gathers each request's hyperplanes and reflects inside the
+  GEMM k-loop.
+* ``--method etherplus`` (rank-2, the paper's best-performing variant):
+  ``etherplus_reflect_batched`` applies each tenant's H⁺ on the input
+  side and — for two-sided adapters — its H̃⁺ on the output features,
+  with u1/v1/u2/v2 all stacked on the bank's tenant axis.
+
 ``--backend {jnp,pallas,auto}`` selects the execution backend for the
 ETHER hot ops (core.execute); ``auto`` uses the Pallas kernels whenever
 the shapes tile and is the serving default.
@@ -115,9 +126,11 @@ def main():
         return pf, st
 
     if args.tenants > 0:
-        if args.method != "ether":
-            raise SystemExit("--tenants requires --method ether "
-                             "(AdapterBank is ETHER-only)")
+        from repro.core.peft import AdapterBank
+        if args.method not in AdapterBank.BANK_METHODS:
+            raise SystemExit(f"--tenants requires --method in "
+                             f"{AdapterBank.BANK_METHODS} (banks gather "
+                             f"per-request hyperplanes)")
         if args.merged:
             raise SystemExit("--merged conflicts with --tenants: the "
                              "tenants mode already runs the merged "
@@ -125,8 +138,8 @@ def main():
         bank = init_adapter_bank(jax.random.fold_in(rng, 1), params, peft,
                                  args.tenants)
         kb = bank.size_bytes() / 1e3
-        print(f"adapter bank: {args.tenants} tenants = {kb:.1f} KB HBM "
-              f"({kb / args.tenants:.2f} KB/tenant)")
+        print(f"adapter bank [{args.method}]: {args.tenants} tenants = "
+              f"{kb:.1f} KB HBM ({kb / args.tenants:.2f} KB/tenant)")
         ids = jax.random.randint(jax.random.fold_in(rng, 4), (B,), 0,
                                  args.tenants, jnp.int32)
         print(f"request tenant ids: {ids.tolist()}")
@@ -160,13 +173,17 @@ def main():
         params = merge_params(params, adapters, peft)
         adapters, peft = None, None
 
+    execute.reset_counters()
     pf, st = make_fns(peft)
     t_prefill, t_tok, gen = _timed_generation(pf, st, params, adapters,
                                               batch, args.gen)
+    live = {k: v for k, v in execute.counters().items() if v}
     print(f"prefill: {t_prefill*1e3:.1f} ms  "
           f"decode: {t_tok*1e3:.2f} ms/token "
           f"({'merged' if args.merged else 'unmerged adapters'}, "
           f"backend={args.backend})")
+    if live:
+        print(f"backends traced: {live}")
     print("generated:", gen[0].tolist())
 
 

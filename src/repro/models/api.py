@@ -101,7 +101,8 @@ def prefill(params: Params, adapters: Optional[Params], batch: dict, cfg,
     last-position logits) — the serve_prefill entry the dry-run lowers.
 
     ``tenant_ids`` (B,) selects each request's adapter from an
-    AdapterBank passed as ``adapters`` (multi-tenant serving)."""
+    AdapterBank passed as ``adapters`` (multi-tenant serving; rank-1
+    ETHER and rank-2 ETHER+ banks, DESIGN.md §2)."""
     adapters = _resolve_adapters(adapters, tenant_ids)
     if isinstance(cfg, EncDecConfig):
         enc_out = encdec.encode(params, cfg, batch["frame_embeds"],
@@ -183,7 +184,8 @@ def decode_step(params: Params, adapters: Optional[Params], cache: Params,
     serve_step entry the decode_32k / long_500k cells lower.
 
     ``tenant_ids`` (B,) selects each request's adapter from an
-    AdapterBank passed as ``adapters`` (multi-tenant serving)."""
+    AdapterBank passed as ``adapters`` (multi-tenant serving; rank-1
+    ETHER and rank-2 ETHER+ banks, DESIGN.md §2)."""
     adapters = _resolve_adapters(adapters, tenant_ids)
     if isinstance(cfg, EncDecConfig):
         hidden, new_cache = encdec.decode(params, cfg, tokens, cache=cache,

@@ -27,7 +27,9 @@ RNG = jax.random.PRNGKey(0)
 
 def test_registry_has_both_backends_for_every_ether_op():
     for op in ("ether_reflect", "householder_gemm", "ether_merge",
-               "ether_reflect_batched"):
+               "ether_reflect_batched", "etherplus_gemm",
+               "householder_gemm_batched", "etherplus_reflect_batched",
+               "etherplus_merge"):
         assert set(execute.available(op)) == {"jnp", "pallas"}, op
 
 
