@@ -121,7 +121,10 @@ def run_suite(shapes: str = "serving", include_interp: bool = False,
     """
     grid = SERVING_SHAPES if shapes == "serving" else TINY_SHAPES
     on_tpu = jax.default_backend() == "tpu"
-    ops_in_registry = sorted({o for (o, _) in execute._REGISTRY})
+    # forward ops only — the *_bwd tier is timed (as value-and-grad and
+    # as standalone backward dispatches) by benchmarks.train_suite.
+    ops_in_registry = sorted({o for (o, _) in execute._REGISTRY
+                              if not execute.is_bwd_op(o)})
     entries = []
     for op in ops_in_registry:
         cells = _shapes_for(op, grid)
@@ -141,7 +144,8 @@ def run_suite(shapes: str = "serving", include_interp: bool = False,
                          and cell["d"] * cell["batch"] * cell["tokens"]
                          >= 2**22)
                 it = iters or (3 if heavy else 10)
-                us = time_us(fn, *args, iters=it, warmup=1 if heavy else 2)
+                us = time_us(fn, *args, iters=it, warmup=1 if heavy else 2,
+                             reps=1 if iters else 3)
                 entries.append(dict(
                     op=op, backend=backend, kind=kind,
                     mode=("interpret" if emulated else
@@ -150,7 +154,8 @@ def run_suite(shapes: str = "serving", include_interp: bool = False,
                     gflops=round(_flops(op, cell) / max(us, 1e-9) / 1e3, 2),
                 ))
     covered = {(e["op"], e["backend"]) for e in entries}
-    missing = sorted(set(execute._REGISTRY) - covered)
+    missing = sorted({pair for pair in execute._REGISTRY
+                      if not execute.is_bwd_op(pair[0])} - covered)
     if missing:
         raise SystemExit(f"kernel bench suite is missing entries for "
                          f"registered ops: {missing}")
@@ -160,8 +165,25 @@ def run_suite(shapes: str = "serving", include_interp: bool = False,
         note=("pallas rows off-TPU are interpret-mode emulation (smallest "
               "shape only unless --include-interp); jnp rows are the "
               "CPU-comparable numbers"),
+        history=_history(entries),
         entries=entries,
     )
+
+
+def _history(entries) -> dict:
+    """Frozen before/after records for tracked one-off fixes — static,
+    so regenerating the payload on another box never mutates them.
+
+    PR 3 merge-cliff fix: the d-major right-side projection einsum
+    "dnb,nb->dn" lowered to a per-row matvec loop on CPU; rewritten as
+    fused multiply+reduce in core/transforms (reflect_weight
+    side='right', etherplus_weight both projections).  Both numbers
+    were measured at d=4096 (jnp rows) on the PR-3 reference box."""
+    del entries
+    return {"pr3_merge_cliff_us_at_d4096_jnp": {
+        "ether_merge": {"before": 86685.07, "after": 62720.48},
+        "etherplus_merge": {"before": 392057.08, "after": 88054.23},
+    }}
 
 
 def run(include_interp: bool = False):

@@ -1,0 +1,240 @@
+"""Tracked training-step benchmark suite — the backward-pass counterpart
+of ``kernels_suite``.
+
+    PYTHONPATH=src python -m benchmarks.run --suite train \
+        --json BENCH_train.json
+
+writes ``BENCH_train.json`` at the repo root so the *training-side* perf
+trajectory is measurable the same way PR 2 made serving measurable.
+Three kinds of entries:
+
+``value_and_grad``
+    jax.value_and_grad of a scalar loss through ``execute.dispatch`` of
+    each forward op, w.r.t. its trainable adapter leaves, per backend —
+    the end-to-end cost of one adapted-linear training step at that
+    shape (forward + backward + adapter cotangents).
+
+``bwd``
+    The registered ``<op>_bwd`` dispatched standalone under a fixed
+    cotangent — isolates the backward kernel from forward and loss.
+
+``train_step`` (shape key ``e2e``)
+    A small end-to-end finetune step through ``runtime.trainer.Trainer``
+    (jit'd loss → grad → adamw update), per backend, reporting per-step
+    wall time and the fwd/bwd Pallas dispatch counters observed while
+    tracing — proof the kernel path is live inside the real trainer.
+
+Honest labeling off-TPU mirrors kernels_suite: pallas rows run the
+interpret-mode emulator there, so each (op, pallas) pair is timed once
+at the smallest shape with ``mode: interpret`` unless
+``--include-interp``; jnp rows are the CPU-comparable numbers.
+
+The suite FAILS (SystemExit) if any registered forward op lacks a
+registered ``<op>_bwd`` on both backends, or if any forward op ends up
+without a ``*_bwd`` Pallas row in the payload — CI runs it at tiny
+shapes as a smoke.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._common import time_us
+from benchmarks.kernels_suite import (SERVING_SHAPES, TINY_SHAPES,
+                                      _args_for, _shapes_for)
+from repro.core import execute
+from repro.kernels import ops  # noqa: F401 — populates the registry
+
+# Positions of the trainable adapter leaves in each forward op's operand
+# tuple (what value_and_grad differentiates w.r.t.) — the ETHER u/v
+# vectors and banks ARE the trainables; x and w stay frozen.
+TRAINABLE_ARGS = {
+    "ether_reflect": (1,),
+    "householder_gemm": (2,),
+    "ether_merge": (1,),
+    "ether_reflect_batched": (1,),
+    "etherplus_gemm": (2, 3, 4, 5),
+    "householder_gemm_batched": (2,),
+    "etherplus_reflect_batched": (1, 2),
+    "etherplus_merge": (1, 2, 3, 4),
+}
+
+# smaller grids than the serving suite: every timing here includes a
+# backward pass (~2× forward FLOPs) and the jnp rows run real XLA
+TRAIN_SHAPES = {
+    "decode": [dict(batch=8, tokens=1, d=1024)],
+    "prefill": [dict(batch=4, tokens=128, d=1024),
+                dict(batch=4, tokens=128, d=2048)],
+}
+
+
+def _grid(shapes: str) -> dict:
+    return {"serving": SERVING_SHAPES, "train": TRAIN_SHAPES,
+            "tiny": TINY_SHAPES}[shapes]
+
+
+def _loss_fn(op: str, backend: str, args: tuple, train_idx: tuple):
+    """Scalar loss closure over the trainable leaves of ``args``."""
+    def loss(leaves):
+        full = list(args)
+        for pos, leaf in zip(train_idx, leaves):
+            full[pos] = leaf
+        return jnp.sum(execute.dispatch(op, backend, *full) ** 2)
+    return loss
+
+
+def _cotangent(op: str, args: tuple):
+    """A fixed unit cotangent matching the forward op's output shape."""
+    out = jax.eval_shape(
+        lambda *a: execute.dispatch(op, "jnp", *a), *args)
+    return jnp.ones(out.shape, out.dtype)
+
+
+def _floats_only(cotangents):
+    """Drop None and float0 cotangents (int operands like tenant ids) —
+    they are not returnable from jit and carry no timing signal."""
+    return tuple(c for c in cotangents
+                 if c is not None
+                 and getattr(c, "dtype", None) != jax.dtypes.float0)
+
+
+def run_suite(shapes: str = "train", include_interp: bool = False,
+              iters: int | None = None) -> dict:
+    """Time value-and-grad + standalone backward for every op/backend.
+
+    Raises SystemExit if any forward op lacks a backward entry."""
+    grid = _grid(shapes)
+    on_tpu = jax.default_backend() == "tpu"
+    fwd_ops = sorted({o for (o, _) in execute._REGISTRY
+                      if not execute.is_bwd_op(o)})
+    missing_bwd = [op for op in fwd_ops
+                   if set(execute.available(op + "_bwd")) != {"jnp",
+                                                              "pallas"}]
+    if missing_bwd:
+        raise SystemExit(f"forward ops without a registered backward on "
+                         f"both backends: {missing_bwd}")
+    entries = []
+    for op in fwd_ops:
+        cells = _shapes_for(op, grid)
+        cells.sort(key=lambda kc: (kc[1]["d"],
+                                   kc[1]["batch"] * kc[1]["tokens"]))
+        train_idx = TRAINABLE_ARGS[op]
+        for backend in sorted(execute.available(op)):
+            emulated = backend == "pallas" and not on_tpu
+            todo = cells[:1] if emulated and not include_interp else cells
+            for kind, cell in todo:
+                args = _args_for(op, cell)
+                leaves = tuple(args[i] for i in train_idx)
+                g = _cotangent(op, args)
+                vag = jax.jit(jax.value_and_grad(
+                    _loss_fn(op, backend, args, train_idx)))
+                bwd = jax.jit(
+                    lambda *a, _op=op, _be=backend: _floats_only(
+                        execute.dispatch(_op + "_bwd", _be, *a)))
+                it = iters or (3 if emulated else 5)
+                reps = 1 if iters else 3
+                mode = ("interpret" if emulated else
+                        "compiled" if backend == "pallas" else "xla")
+                us_vag = time_us(vag, leaves, iters=it, warmup=1,
+                                 reps=reps)
+                us_bwd = time_us(bwd, *args, g, iters=it, warmup=1,
+                                 reps=reps)
+                shape = dict(cell)
+                entries.append(dict(op=op, backend=backend, kind=kind,
+                                    what="value_and_grad", mode=mode,
+                                    shape=shape,
+                                    us_per_call=round(us_vag, 2)))
+                entries.append(dict(op=op + "_bwd", backend=backend,
+                                    kind=kind, what="bwd", mode=mode,
+                                    shape=shape,
+                                    us_per_call=round(us_bwd, 2)))
+    entries.extend(_train_step_entries(shapes, include_interp))
+    _check_coverage(fwd_ops, entries)
+    return dict(
+        suite="train", shapes=shapes, platform=jax.default_backend(),
+        jax=jax.__version__,
+        note=("value_and_grad = fwd+bwd+adapter cotangents through "
+              "execute.dispatch; bwd = standalone <op>_bwd dispatch; "
+              "pallas rows off-TPU are interpret-mode emulation "
+              "(smallest shape only unless --include-interp)"),
+        entries=entries,
+    )
+
+
+def _check_coverage(fwd_ops, entries) -> None:
+    have_pallas_bwd = {e["op"] for e in entries
+                       if e["what"] == "bwd" and e["backend"] == "pallas"}
+    lacking = [op for op in fwd_ops if op + "_bwd" not in have_pallas_bwd]
+    if lacking:
+        raise SystemExit(f"train bench suite is missing *_bwd pallas "
+                         f"rows for: {lacking}")
+
+
+def _train_step_entries(shapes: str, include_interp: bool) -> list[dict]:
+    """A real finetune step through runtime.trainer.Trainer, per backend."""
+    from repro.core.transforms import PEFTConfig
+    from repro.data.pipeline import SyntheticLMStream
+    from repro.models import ModelConfig
+    from repro.configs._common import SMOKE
+    from repro.optim import adamw, constant
+    from repro.runtime.trainer import Trainer
+
+    del include_interp  # e2e interpret rows always run, at tiny size
+    tiny = shapes == "tiny"
+    steps = 3
+    out = []
+    on_tpu = jax.default_backend() == "tpu"
+    for backend in ("jnp", "auto"):
+        # off-TPU the auto row steps through the interpret-mode emulator
+        # per adapted linear — keep that row at the tiny model so the
+        # counters proof stays cheap; mode='interpret' labels it.
+        small = tiny or (backend == "auto" and not on_tpu)
+        cfg = ModelConfig(name="train-bench", n_layers=2,
+                          d_model=128 if small else 256, n_heads=4,
+                          n_kv=2, d_ff=256 if small else 512, vocab=512,
+                          **SMOKE)
+        peft = PEFTConfig(method="ether", n_blocks=8,
+                          targets="q_proj|k_proj|v_proj|o_proj|gate_proj"
+                                  "|up_proj|down_proj", backend=backend)
+        stream = SyntheticLMStream(vocab=cfg.vocab, batch=2,
+                                   seq_len=16 if small else 32, seed=0)
+        execute.reset_counters()
+        tr = Trainer(cfg, peft, adamw(constant(1e-2)), seed=0)
+        import time
+        tr.fit(stream, steps=1)           # compile + warm the step fn
+        t0 = time.perf_counter()
+        tr.fit(stream, steps=1 + steps)
+        dt = (time.perf_counter() - t0) / steps
+        pal_fwd = sum(v for k, v in execute.counters("fwd").items()
+                      if k.endswith(".pallas"))
+        pal_bwd = sum(v for k, v in execute.counters("bwd").items()
+                      if k.endswith(".pallas"))
+        ref_ad = sum(v for k, v in execute.counters("bwd").items()
+                     if k.endswith(".jnp") or k.endswith("pallas_fallback"))
+        out.append(dict(
+            op="train_step", backend=backend, kind="e2e",
+            what="train_step",
+            mode=("xla" if backend == "jnp" else
+                  "compiled" if on_tpu else "interpret"),
+            shape=dict(batch=2, tokens=16 if small else 32,
+                       d=cfg.d_model),
+            us_per_call=round(dt * 1e6, 2),
+            pallas_fwd_traces=pal_fwd, pallas_bwd_traces=pal_bwd,
+            ref_ad_traces=ref_ad,
+        ))
+    return out
+
+
+def run(include_interp: bool = False):
+    """benchmarks.run module protocol: CSV-row dicts (tiny shapes)."""
+    payload = run_suite(shapes="tiny", include_interp=include_interp)
+    return [dict(name=f"train/{e['op']}/{e['backend']}/{e['kind']}",
+                 us_per_call=e["us_per_call"],
+                 derived=f"{e['what']} {e['mode']} d={e['shape']['d']}")
+            for e in payload["entries"]]
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run_suite(shapes="tiny"), indent=1))

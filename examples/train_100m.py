@@ -46,6 +46,13 @@ def main():
     ap.add_argument("--adapt-lr", type=float, default=2e-2)
     ap.add_argument("--out", default="/tmp/run100m")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backend", default="jnp",
+                    choices=("jnp", "pallas", "auto"),
+                    help="execution backend for the ETHER hot ops; "
+                         "'auto' is kernel-backed both directions "
+                         "(compiled on TPU, interpret-mode emulation "
+                         "elsewhere — slow on CPU, but the counters "
+                         "prove the path)")
     args = ap.parse_args()
 
     cfg = model_100m(args.quick)
@@ -72,17 +79,38 @@ def main():
     # ---- phase 2: ETHER adaptation of the pretrained base ----
     peft = PEFTConfig(method="ether", n_blocks=32,
                       targets="q_proj|k_proj|v_proj|o_proj|gate_proj"
-                              "|up_proj|down_proj")
+                              "|up_proj|down_proj", backend=args.backend)
+    from repro.core import execute
+    execute.reset_counters()
+    step_times: list = []
     tr2 = Trainer(cfg, peft, adamw(constant(args.adapt_lr)),
                   ckpt_dir=os.path.join(args.out, "adapt"), ckpt_every=20,
-                  log_path=os.path.join(args.out, "adapt.jsonl"))
+                  log_path=os.path.join(args.out, "adapt.jsonl"),
+                  metrics_hook=lambda s, mt: step_times.append(
+                      mt["step_time"]))
     tr2.state["params"] = base_params        # adapt the pretrained base
     stream_b = SyntheticLMStream(vocab=cfg.vocab, batch=args.batch,
                                  seq_len=args.seq_len, seed=777)
     m2 = tr2.fit(stream_b, steps=args.adapt_steps)
     print(f"ETHER adaptation done @ step {tr2.step}: {m2}", flush=True)
 
+    # kernel-path visibility: what the adaptation phase actually traced
+    # (fwd AND bwd — *_bwd.pallas > 0 means training ran hand-derived
+    # Pallas backwards, *_bwd.jnp would mean ref-AD fallback) and what a
+    # step costs once jit is warm.
+    fwd_c, bwd_c = execute.counters("fwd"), execute.counters("bwd")
+    steady = step_times[1:] or step_times    # step 0 includes jit
+    per_step = sum(steady) / max(len(steady), 1)
+    first = f"(first step {step_times[0]:.3f}s incl. jit)" \
+        if step_times else "(no adapt steps ran)"
+    print(f"[adapt] backend={args.backend}  per-step wall time "
+          f"{per_step:.3f}s {first}", flush=True)
+    print(f"[adapt] execute counters fwd: {fwd_c or '{}'}", flush=True)
+    print(f"[adapt] execute counters bwd: {bwd_c or '{}'}", flush=True)
+
     summary = {"params_m": n / 1e6, "pretrain": m, "adapt": m2,
+               "backend": args.backend, "adapt_step_time_s": per_step,
+               "execute_counters": {"fwd": fwd_c, "bwd": bwd_c},
                "anomalous_steps": tr.timer.anomalies + tr2.timer.anomalies}
     with open(os.path.join(args.out, "summary.json"), "w") as f:
         json.dump(summary, f, indent=1)

@@ -126,9 +126,25 @@ def dispatch(op: str, backend: str, *args, **kwargs):
     return impl(*args, **kwargs)
 
 
-def counters() -> dict[str, int]:
-    """Snapshot of per-(op, backend) trace counts."""
-    return dict(_COUNTERS)
+def is_bwd_op(op: str) -> bool:
+    """True for registered backward ops (the ``*_bwd`` tier)."""
+    return op.endswith("_bwd")
+
+
+def counters(phase: str | None = None) -> dict[str, int]:
+    """Snapshot of per-(op, backend) trace counts.
+
+    ``phase='fwd'`` returns only forward-op keys, ``phase='bwd'`` only
+    the ``*_bwd`` dispatches — so tests can assert the backward actually
+    ran on Pallas (a silent ref-AD fallback shows up as ``*_bwd.jnp``)."""
+    if phase is None:
+        return dict(_COUNTERS)
+    if phase not in ("fwd", "bwd"):
+        raise ValueError(f"phase must be 'fwd', 'bwd' or None, got "
+                         f"{phase!r}")
+    want = phase == "bwd"
+    return {k: v for k, v in _COUNTERS.items()
+            if is_bwd_op(k.split(".", 1)[0]) == want}
 
 
 def reset_counters() -> None:
@@ -151,6 +167,16 @@ def lane_ok(dim: int) -> bool:
     """Feature-dim lane constraint: 128-aligned on a real TPU; interpret
     mode (off-TPU emulation) has no lane tiling."""
     return dim % 128 == 0 or jax.default_backend() != "tpu"
+
+
+def largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= cap — the shared block-shrink
+    rule the kernel wrappers use so odd shapes get more, smaller tiles
+    instead of crashing."""
+    b = min(cap, n)
+    while n % b:
+        b -= 1
+    return b
 
 
 def gemm_tiles(t: int, d: int, f: int, db: int,
@@ -265,28 +291,48 @@ def _sup_ep_merge(w, u1, v1, u2=None, v2=None) -> bool:
 # impls from kernels.ops *inside* the function bodies — both modules
 # import this one at module scope, so top-level imports would cycle.
 #
-# Pallas impls carry a custom_vjp whose backward differentiates the jnp
-# reference: the forward hot path runs the kernel, while gradients (the
-# ETHER `u` vectors ARE the trainables) come from XLA's AD of the
-# mathematically identical einsum form — pallas_call itself has no
-# batching-safe autodiff story on every jax version we support.
+# Pallas forwards carry a custom_vjp whose backward is itself dispatched
+# through this registry: every forward op has a first-class ``<op>_bwd``
+# registered with a hand-derived Pallas kernel (pallas backend) and
+# ref-AD — XLA differentiating the jnp einsum form — as the jnp backend.
+# ``auto`` resolution picks the kernel whenever its tiling supports the
+# operand shapes, so jax.grad of a training step runs Pallas in BOTH
+# directions; pallas_call itself has no autodiff on the jax versions we
+# support, which is why the backwards are hand-derived (DESIGN.md §3).
 # ---------------------------------------------------------------------------
 
-def _with_ref_vjp(fn, ref_fn):
-    """Wrap a pallas forward with a backward that differentiates ref_fn."""
+def _registry_vjp(op, fn):
+    """Wrap a pallas forward with a registry-dispatched backward.
+
+    The backward dispatch is traced like any other op, so counters
+    record whether training actually hit the ``<op>_bwd`` kernel
+    (``<op>_bwd.pallas``) or fell back to ref-AD (``<op>_bwd.jnp``)."""
     @functools.wraps(fn)
     @jax.custom_vjp
     def wrapped(*args):
         return fn(*args)
 
     def fwd(*args):
+        # Residuals are the primal operands themselves: the backwards
+        # recompute normalized directions (O(d), trivial) and — for the
+        # two-sided fused GEMM — the pre-epilogue intermediate, instead
+        # of saving forward intermediates to HBM.
         return fn(*args), args
 
     def bwd(residual_args, g):
-        return jax.vjp(ref_fn, *residual_args)[1](g)
+        return tuple(dispatch(op + "_bwd", "auto", *residual_args, g))
 
     wrapped.defvjp(fwd, bwd)
     return wrapped
+
+
+def _ad_bwd(fwd_fn):
+    """The jnp backend of a ``*_bwd`` op: XLA AD of the jnp forward."""
+    @functools.wraps(fwd_fn)
+    def bwd(*args):
+        *primals, g = args
+        return jax.vjp(fwd_fn, *primals)[1](g)
+    return bwd
 
 
 @register("ether_reflect", "jnp")
@@ -301,7 +347,7 @@ def _reflect_pallas(x, u):
 
 
 register("ether_reflect", "pallas")(
-    _with_ref_vjp(_reflect_pallas, _reflect_jnp))
+    _registry_vjp("ether_reflect", _reflect_pallas))
 
 
 @register("householder_gemm", "jnp")
@@ -316,7 +362,7 @@ def _hh_gemm_pallas(x, w, u):
 
 
 register("householder_gemm", "pallas")(
-    _with_ref_vjp(_hh_gemm_pallas, _hh_gemm_jnp))
+    _registry_vjp("householder_gemm", _hh_gemm_pallas))
 
 
 @register("ether_merge", "jnp")
@@ -331,7 +377,7 @@ def _merge_pallas(w, u):
 
 
 register("ether_merge", "pallas")(
-    _with_ref_vjp(_merge_pallas, _merge_jnp))
+    _registry_vjp("ether_merge", _merge_pallas))
 
 
 @register("ether_reflect_batched", "jnp")
@@ -346,7 +392,7 @@ def _reflect_batched_pallas(x, u_bank, ids):
 
 
 register("ether_reflect_batched", "pallas")(
-    _with_ref_vjp(_reflect_batched_pallas, _reflect_batched_jnp))
+    _registry_vjp("ether_reflect_batched", _reflect_batched_pallas))
 
 
 @register("etherplus_gemm", "jnp")
@@ -364,7 +410,7 @@ def _ep_gemm_pallas(x, w, u1, v1, u2=None, v2=None):
 
 
 register("etherplus_gemm", "pallas")(
-    _with_ref_vjp(_ep_gemm_pallas, _ep_gemm_jnp))
+    _registry_vjp("etherplus_gemm", _ep_gemm_pallas))
 
 
 @register("householder_gemm_batched", "jnp")
@@ -379,7 +425,7 @@ def _hh_gemm_batched_pallas(x, w, u_bank, ids):
 
 
 register("householder_gemm_batched", "pallas")(
-    _with_ref_vjp(_hh_gemm_batched_pallas, _hh_gemm_batched_jnp))
+    _registry_vjp("householder_gemm_batched", _hh_gemm_batched_pallas))
 
 
 @register("etherplus_reflect_batched", "jnp")
@@ -394,7 +440,7 @@ def _ep_reflect_batched_pallas(x, u_bank, v_bank, ids):
 
 
 register("etherplus_reflect_batched", "pallas")(
-    _with_ref_vjp(_ep_reflect_batched_pallas, _ep_reflect_batched_jnp))
+    _registry_vjp("etherplus_reflect_batched", _ep_reflect_batched_pallas))
 
 
 @register("etherplus_merge", "jnp")
@@ -412,4 +458,127 @@ def _ep_merge_pallas(w, u1, v1, u2=None, v2=None):
 
 
 register("etherplus_merge", "pallas")(
-    _with_ref_vjp(_ep_merge_pallas, _ep_merge_jnp))
+    _registry_vjp("etherplus_merge", _ep_merge_pallas))
+
+
+# ---------------------------------------------------------------------------
+# Backward ops (the ``*_bwd`` tier).  Signature: (*forward_primals, g) →
+# cotangent tuple ordered like the primals.  jnp backend = ref-AD (XLA
+# differentiating the jnp forward impl — exactly what the old
+# _with_ref_vjp did for every shape); pallas backend = the hand-derived
+# kernels in kernels/{reflect_bwd,gemm_bwd,reflect_bwd_batched,
+# merge_bwd}.py.  Supports rules delegate to the forward op's rule: a
+# shape the forward kernel tiles is a shape its backward tiles too.
+# ---------------------------------------------------------------------------
+
+register("ether_reflect_bwd", "jnp")(_ad_bwd(_reflect_jnp))
+
+
+@register("ether_reflect_bwd", "pallas")
+def _reflect_bwd_pallas(x, u, g):
+    from repro.kernels import ops
+    return ops.ether_reflect_bwd(x, u, g)
+
+
+@supports_rule("ether_reflect_bwd")
+def _sup_reflect_bwd(x, u, g):
+    return _sup_reflect(x, u)
+
+
+register("householder_gemm_bwd", "jnp")(_ad_bwd(_hh_gemm_jnp))
+
+
+@register("householder_gemm_bwd", "pallas")
+def _hh_gemm_bwd_pallas(x, w, u, g):
+    from repro.kernels import ops
+    return ops.householder_gemm_bwd(x, w, u, g)
+
+
+@supports_rule("householder_gemm_bwd")
+def _sup_hh_gemm_bwd(x, w, u, g):
+    return _sup_hh_gemm(x, w, u)
+
+
+register("ether_merge_bwd", "jnp")(_ad_bwd(_merge_jnp))
+
+
+@register("ether_merge_bwd", "pallas")
+def _merge_bwd_pallas(w, u, g):
+    from repro.kernels import ops
+    return ops.ether_merge_bwd(w, u, g)
+
+
+@supports_rule("ether_merge_bwd")
+def _sup_merge_bwd(w, u, g):
+    return _sup_merge(w, u)
+
+
+register("ether_reflect_batched_bwd", "jnp")(_ad_bwd(_reflect_batched_jnp))
+
+
+@register("ether_reflect_batched_bwd", "pallas")
+def _reflect_batched_bwd_pallas(x, u_bank, ids, g):
+    from repro.kernels import ops
+    return ops.ether_reflect_batched_bwd(x, u_bank, ids, g)
+
+
+@supports_rule("ether_reflect_batched_bwd")
+def _sup_reflect_batched_bwd(x, u_bank, ids, g):
+    return _sup_reflect_batched(x, u_bank, ids)
+
+
+register("etherplus_gemm_bwd", "jnp")(_ad_bwd(_ep_gemm_jnp))
+
+
+@register("etherplus_gemm_bwd", "pallas")
+def _ep_gemm_bwd_pallas(x, w, u1, v1, u2, v2, g):
+    from repro.kernels import ops
+    return ops.etherplus_gemm_bwd(x, w, u1, v1, u2, v2, g)
+
+
+@supports_rule("etherplus_gemm_bwd")
+def _sup_ep_gemm_bwd(x, w, u1, v1, u2, v2, g):
+    return _sup_ep_gemm(x, w, u1, v1, u2, v2)
+
+
+register("householder_gemm_batched_bwd", "jnp")(_ad_bwd(_hh_gemm_batched_jnp))
+
+
+@register("householder_gemm_batched_bwd", "pallas")
+def _hh_gemm_batched_bwd_pallas(x, w, u_bank, ids, g):
+    from repro.kernels import ops
+    return ops.householder_gemm_batched_bwd(x, w, u_bank, ids, g)
+
+
+@supports_rule("householder_gemm_batched_bwd")
+def _sup_hh_gemm_batched_bwd(x, w, u_bank, ids, g):
+    return _sup_hh_gemm_batched(x, w, u_bank, ids)
+
+
+register("etherplus_reflect_batched_bwd", "jnp")(
+    _ad_bwd(_ep_reflect_batched_jnp))
+
+
+@register("etherplus_reflect_batched_bwd", "pallas")
+def _ep_reflect_batched_bwd_pallas(x, u_bank, v_bank, ids, g):
+    from repro.kernels import ops
+    return ops.etherplus_reflect_batched_bwd(x, u_bank, v_bank, ids, g)
+
+
+@supports_rule("etherplus_reflect_batched_bwd")
+def _sup_ep_reflect_batched_bwd(x, u_bank, v_bank, ids, g):
+    return _sup_ep_reflect_batched(x, u_bank, v_bank, ids)
+
+
+register("etherplus_merge_bwd", "jnp")(_ad_bwd(_ep_merge_jnp))
+
+
+@register("etherplus_merge_bwd", "pallas")
+def _ep_merge_bwd_pallas(w, u1, v1, u2, v2, g):
+    from repro.kernels import ops
+    return ops.etherplus_merge_bwd(w, u1, v1, u2, v2, g)
+
+
+@supports_rule("etherplus_merge_bwd")
+def _sup_ep_merge_bwd(w, u1, v1, u2, v2, g):
+    return _sup_ep_merge(w, u1, v1, u2, v2)

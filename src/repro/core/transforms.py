@@ -197,8 +197,12 @@ def etherplus_weight(W: jax.Array, u: jax.Array, v: jax.Array,
             + vh[:, :, None] * pv[:, None, :]
         return Wb.reshape(d, f)
     Wb = W.reshape(d, n, db)
-    pu = jnp.einsum("dnb,nb->dn", Wb, uh)
-    pv = jnp.einsum("dnb,nb->dn", Wb, vh)
+    # multiply+reduce, NOT einsum("dnb,nb->dn"): the d-major batched
+    # einsum lowers to a per-(d,n) matvec loop on CPU (~3× slower than
+    # the fused elementwise reduction at d=4096 — the BENCH_kernels.json
+    # merge cliff); both projections fuse into one read of W this way.
+    pu = (Wb * uh[None]).sum(-1)
+    pv = (Wb * vh[None]).sum(-1)
     Wb = Wb - pu[..., None] * uh[None] + pv[..., None] * vh[None]
     return Wb.reshape(d, f)
 
@@ -221,7 +225,9 @@ def reflect_weight(W: jax.Array, u: jax.Array, *, coeff: float = 2.0,
     else:
         d, f = W.shape
         Wb = W.reshape(d, n, db)
-        proj = jnp.einsum("dnb,nb->dn", Wb, uh)       # W_j u_j
+        # W_j u_j as multiply+reduce — see etherplus_weight for why the
+        # d-major einsum form is a CPU cliff.
+        proj = (Wb * uh[None]).sum(-1)
         Wb = Wb + (sign * coeff) * proj[..., None] * uh[None]
         return Wb.reshape(d, f)
 

@@ -40,7 +40,7 @@ def ether_reflect_pallas(x: jax.Array, u: jax.Array, *, block_t: int = 256,
     (core.execute._interpret) — direct callers no longer silently run the
     Python interpreter on real hardware.
     """
-    from repro.core.execute import _interpret
+    from repro.core.execute import _interpret, largest_divisor
     interpret = _interpret(interpret)
     t, d = x.shape
     n, db = u.shape
@@ -48,9 +48,7 @@ def ether_reflect_pallas(x: jax.Array, u: jax.Array, *, block_t: int = 256,
     # Largest divisor of t that is <= block_t: direct callers and odd
     # decode shapes (t not a multiple of 256) must not crash — the grid
     # just gets more, smaller row-tiles.
-    block_t = min(block_t, t)
-    while t % block_t:
-        block_t -= 1
+    block_t = largest_divisor(t, block_t)
     grid = (t // block_t,)
     return pl.pallas_call(
         functools.partial(_reflect_kernel, n=n, db=db),

@@ -100,7 +100,7 @@ def etherplus_gemm_pallas(x: jax.Array, w: jax.Array, u1: jax.Array,
     on the output blocks before writeback.
 
     interpret=None auto-detects via core.execute._interpret."""
-    from repro.core.execute import _interpret
+    from repro.core.execute import _interpret, largest_divisor
     interpret = _interpret(interpret)
     t, d = x.shape
     d2, f = w.shape
@@ -108,12 +108,8 @@ def etherplus_gemm_pallas(x: jax.Array, w: jax.Array, u1: jax.Array,
     assert d == d2 and n * db == d and u1.shape == v1.shape
     # largest divisor of t (odd decode shapes must not crash; see
     # ether_reflect_pallas — same guard)
-    block_m = min(block_m, t)
-    while t % block_m:
-        block_m -= 1
-    block_f = min(block_f, f)
-    while f % block_f:
-        block_f -= 1
+    block_m = largest_divisor(t, block_m)
+    block_f = largest_divisor(f, block_f)
     if u2 is not None:
         # two-sided epilogue needs whole output blocks per F-tile:
         # shrink further until block_f is a multiple of db_out too

@@ -47,7 +47,7 @@ def etherplus_merge_left_pallas(w: jax.Array, u: jax.Array, v: jax.Array,
                                 *, block_f: int = 512,
                                 interpret: bool | None = None) -> jax.Array:
     """w: (d, f); u/v: (n, db), n*db == d. Returns H⁺_B w."""
-    from repro.core.execute import _interpret
+    from repro.core.execute import _interpret, largest_divisor
     interpret = _interpret(interpret)
     d, f = w.shape
     n, db = u.shape
@@ -59,9 +59,7 @@ def etherplus_merge_left_pallas(w: jax.Array, u: jax.Array, v: jax.Array,
     elif f % 128 == 0:
         block_f = min(block_f, 128)
     else:
-        block_f = min(block_f, f)
-        while f % block_f:
-            block_f -= 1
+        block_f = largest_divisor(f, block_f)
     grid = (n, f // block_f)
     return pl.pallas_call(
         _merge_left_kernel,
@@ -82,14 +80,12 @@ def etherplus_merge_right_pallas(w: jax.Array, u: jax.Array, v: jax.Array,
                                  *, block_d: int = 256,
                                  interpret: bool | None = None) -> jax.Array:
     """w: (d, f); u/v: (n_out, db_out), n_out*db_out == f. Returns w H̃⁺_B."""
-    from repro.core.execute import _interpret
+    from repro.core.execute import _interpret, largest_divisor
     interpret = _interpret(interpret)
     d, f = w.shape
     n, db = u.shape
     assert n * db == f and u.shape == v.shape
-    block_d = min(block_d, d)
-    while d % block_d:
-        block_d -= 1
+    block_d = largest_divisor(d, block_d)
     grid = (d // block_d, n)
     return pl.pallas_call(
         _merge_right_kernel,

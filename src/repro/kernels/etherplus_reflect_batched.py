@@ -50,13 +50,11 @@ def etherplus_reflect_batched_pallas(x: jax.Array, u_bank: jax.Array,
 
     Returns H⁺_B(ids[b]) x[b] — each sequence rank-2-reflected by its
     own tenant's hyperplane pair."""
-    from repro.core.execute import _interpret
+    from repro.core.execute import _interpret, largest_divisor
     b, s, d = x.shape
     _, n, db = u_bank.shape
     assert n * db == d and u_bank.shape == v_bank.shape, (n, db, d)
-    block_s = min(block_s, s)
-    while s % block_s:                       # odd decode shapes must work
-        block_s -= 1
+    block_s = largest_divisor(s, block_s)   # odd decode shapes must work
     grid = (b, s // block_s)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

@@ -1,0 +1,425 @@
+"""Pallas TPU kernels: hand-derived backwards for the fused reflect-GEMMs.
+
+Forward (householder_gemm / etherplus_gemm input side):
+
+    y = R(x) @ W,   R = blockwise (I + c_u ûûᵀ [+ c_v v̂v̂ᵀ])
+
+Backward under cotangent G, with dXr = G @ Wᵀ:
+
+    dx = R(dXr)                      (R symmetric)
+    dL/dû = c_u Σ_t [ (ûᵀx_t) dXr_t + (ûᵀdXr_t) x_t ]   (→ ε-norm chain)
+    dW = R(x)ᵀ @ G                   (frozen-weight cotangent)
+
+Two fused passes instead of one: dx+du share the dXr GEMM so they live
+in one kernel (grid (M/Tm, D/Td, F/Tf), F innermost accumulating dXr in
+f32 scratch; the reflection backward runs on the finished dXr tile and
+dL/dû accumulates in a persistent (n, db) scratch across the whole
+grid).  dW is a *separate* pallas_call so XLA can dead-code it when the
+base weight is frozen — the common PEFT case pays nothing for it.
+Constraint: Td holds whole reflection blocks (Td % db == 0), mirroring
+the forward's Tk rule; ops.py enforces/falls back.
+
+The batched bank variants add a leading (B,) grid axis with
+scalar-prefetch tenant-id gathers (see householder_gemm_batched) and
+emit *per-sequence* un-normalized dL/dû partials — the wrapper
+scatter-adds them into the bank and applies the chain rule once per
+bank row, which is what makes duplicate tenant ids accumulate exactly
+like ref-AD's gather vjp.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.reflect_bwd import norm_chain, reflect_bwd_tile, unit_rows
+
+
+def _slice_rows(ref, k, nk):
+    """Rows [k*nk, (k+1)*nk) of a resident (n, db) adapter ref (f32)."""
+    return ref[pl.dslice(k * nk, nk), :].astype(jnp.float32)
+
+
+def _dx_tile(xb, dxrb, dirs):
+    """Apply the reflect backward for every (un, coeff) direction.
+
+    Returns (dx tile (T, nk, db), [ĝ per direction])."""
+    dx = dxrb
+    ghats = []
+    for un, coeff in dirs:
+        term, ghat = reflect_bwd_tile(xb, dxrb, un, coeff)
+        dx = dx + term
+        ghats.append(ghat)
+    return dx, ghats
+
+
+def _gemm_dx_kernel(u_ref, x_ref, w_ref, g_ref, dx_ref, du_ref,
+                    acc_ref, du_acc_ref, *, nk: int, db: int,
+                    rank2: bool, v_ref=None, dv_ref=None, dv_acc_ref=None):
+    i, k, f = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    nf = pl.num_programs(2)
+
+    @pl.when(f == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((i == 0) & (k == 0) & (f == 0))
+    def _init_du():
+        du_acc_ref[...] = jnp.zeros_like(du_acc_ref)
+        if rank2:
+            dv_acc_ref[...] = jnp.zeros_like(dv_acc_ref)
+
+    # dXr tile accumulation: G (Tm, Tf) · Wᵀ (Tf, Td)
+    acc_ref[...] += jax.lax.dot_general(
+        g_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(f == nf - 1)
+    def _finish_tile():
+        un = unit_rows(_slice_rows(u_ref, k, nk))
+        dirs = [(un, -1.0 if rank2 else -2.0)]
+        if rank2:
+            dirs.append((unit_rows(_slice_rows(v_ref, k, nk)), +1.0))
+        tm, td = acc_ref.shape
+        dxrb = acc_ref[...].reshape(tm, nk, db)
+        xb = x_ref[...].astype(jnp.float32).reshape(tm, nk, db)
+        dx, ghats = _dx_tile(xb, dxrb, dirs)
+        dx_ref[...] = dx.reshape(tm, td).astype(dx_ref.dtype)
+        du_acc_ref[pl.dslice(k * nk, nk), :] += ghats[0]
+        if rank2:
+            dv_acc_ref[pl.dslice(k * nk, nk), :] += ghats[1]
+
+    last = ((i == pl.num_programs(0) - 1) & (k == pl.num_programs(1) - 1)
+            & (f == nf - 1))
+
+    @pl.when(last)
+    def _emit_du():
+        u = u_ref[...].astype(jnp.float32)
+        du_ref[...] = norm_chain(u, du_acc_ref[...]).astype(du_ref.dtype)
+        if rank2:
+            v = v_ref[...].astype(jnp.float32)
+            dv_ref[...] = norm_chain(v, dv_acc_ref[...]).astype(dv_ref.dtype)
+
+
+def _rank2_kernel_shim(u_ref, v_ref, x_ref, w_ref, g_ref, dx_ref, du_ref,
+                       dv_ref, acc_ref, du_acc_ref, dv_acc_ref, *,
+                       nk: int, db: int):
+    _gemm_dx_kernel(u_ref, x_ref, w_ref, g_ref, dx_ref, du_ref, acc_ref,
+                    du_acc_ref, nk=nk, db=db, rank2=True, v_ref=v_ref,
+                    dv_ref=dv_ref, dv_acc_ref=dv_acc_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_d",
+                                             "block_f", "interpret"))
+def reflect_gemm_dx_pallas(x: jax.Array, w: jax.Array, u: jax.Array,
+                           g: jax.Array, v: jax.Array | None = None, *,
+                           block_m: int = 128, block_d: int = 512,
+                           block_f: int = 128,
+                           interpret: bool | None = None):
+    """Fused (dx, du[, dv]) for y = R(x) @ w under cotangent g.
+
+    x: (T, d); w: (d, f); u[/v]: (n, db); g: (T, f).  Rank-1 Householder
+    when v is None (coeff −2), ETHER+ rank-2 otherwise (−1/+1)."""
+    from repro.core.execute import _interpret, largest_divisor
+    interpret = _interpret(interpret)
+    t, d = x.shape
+    d2, f = w.shape
+    n, db = u.shape
+    assert d == d2 and n * db == d and g.shape == (t, f)
+    block_m = largest_divisor(t, block_m)
+    block_f = largest_divisor(f, block_f)
+    block_d = min(block_d, d)
+    if block_d % db:
+        block_d = db * max(1, block_d // db)
+    nk = block_d // db
+    assert d % block_d == 0, "caller guarantees whole K-blocks (ops.py)"
+    grid = (t // block_m, d // block_d, f // block_f)
+    adapter_spec = pl.BlockSpec((n, db), lambda i, k, f: (0, 0))
+    data_specs = [
+        pl.BlockSpec((block_m, block_d), lambda i, k, f: (i, k)),   # x
+        pl.BlockSpec((block_d, block_f), lambda i, k, f: (k, f)),   # w
+        pl.BlockSpec((block_m, block_f), lambda i, k, f: (i, f)),   # g
+    ]
+    dx_spec = pl.BlockSpec((block_m, block_d), lambda i, k, f: (i, k))
+    scratch = [pltpu.VMEM((block_m, block_d), jnp.float32),
+               pltpu.VMEM((n, db), jnp.float32)]
+    if v is None:
+        return pl.pallas_call(
+            functools.partial(_gemm_dx_kernel, nk=nk, db=db, rank2=False),
+            grid=grid,
+            in_specs=[adapter_spec] + data_specs,
+            out_specs=[dx_spec, adapter_spec],
+            out_shape=[jax.ShapeDtypeStruct((t, d), x.dtype),
+                       jax.ShapeDtypeStruct((n, db), u.dtype)],
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(u, x, w, g)
+    return pl.pallas_call(
+        functools.partial(_rank2_kernel_shim, nk=nk, db=db),
+        grid=grid,
+        in_specs=[adapter_spec, adapter_spec] + data_specs,
+        out_specs=[dx_spec, adapter_spec, adapter_spec],
+        out_shape=[jax.ShapeDtypeStruct((t, d), x.dtype),
+                   jax.ShapeDtypeStruct((n, db), u.dtype),
+                   jax.ShapeDtypeStruct((n, db), v.dtype)],
+        scratch_shapes=scratch + [pltpu.VMEM((n, db), jnp.float32)],
+        interpret=interpret,
+    )(u, v, x, w, g)
+
+
+# ---------------------------------------------------------------------------
+# dW = R(x)ᵀ @ G — separate pass so frozen-weight training DCEs it
+# ---------------------------------------------------------------------------
+
+def _gemm_dw_kernel(u_ref, x_ref, g_ref, dw_ref, acc_ref, *, nk: int,
+                    db: int, rank2: bool, v_ref=None):
+    k, t = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    un = unit_rows(_slice_rows(u_ref, k, nk))
+    x = x_ref[...].astype(jnp.float32)
+    tm, td = x.shape
+    xb = x.reshape(tm, nk, db)
+    cu = -1.0 if rank2 else -2.0
+    xr = xb + cu * jnp.einsum("tnb,nb->tn", xb, un)[..., None] * un[None]
+    if rank2:
+        vn = unit_rows(_slice_rows(v_ref, k, nk))
+        xr = xr + jnp.einsum("tnb,nb->tn", xb, vn)[..., None] * vn[None]
+    acc_ref[...] += jax.lax.dot_general(
+        xr.reshape(tm, td), g_ref[...].astype(jnp.float32),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(t == pl.num_programs(2) - 1)
+    def _done():
+        dw_ref[...] = acc_ref[...].astype(dw_ref.dtype)
+
+
+def _dw_rank2_shim(u_ref, v_ref, x_ref, g_ref, dw_ref, acc_ref, *,
+                   nk: int, db: int):
+    _gemm_dw_kernel(u_ref, x_ref, g_ref, dw_ref, acc_ref, nk=nk, db=db,
+                    rank2=True, v_ref=v_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_d",
+                                             "block_f", "w_dtype",
+                                             "interpret"))
+def reflect_gemm_dw_pallas(x: jax.Array, u: jax.Array, g: jax.Array,
+                           v: jax.Array | None = None, *,
+                           block_m: int = 128, block_d: int = 512,
+                           block_f: int = 128, w_dtype=None,
+                           interpret: bool | None = None) -> jax.Array:
+    """dw = R(x)ᵀ @ g.  x: (T, d); g: (T, f); u[/v]: (n, db)."""
+    from repro.core.execute import _interpret, largest_divisor
+    interpret = _interpret(interpret)
+    t, d = x.shape
+    t2, f = g.shape
+    n, db = u.shape
+    assert t == t2 and n * db == d
+    block_m = largest_divisor(t, block_m)
+    block_f = largest_divisor(f, block_f)
+    block_d = min(block_d, d)
+    if block_d % db:
+        block_d = db * max(1, block_d // db)
+    nk = block_d // db
+    assert d % block_d == 0, "caller guarantees whole K-blocks (ops.py)"
+    grid = (d // block_d, f // block_f, t // block_m)
+    adapter_spec = pl.BlockSpec((n, db), lambda k, j, t: (0, 0))
+    data_specs = [
+        pl.BlockSpec((block_m, block_d), lambda k, j, t: (t, k)),   # x
+        pl.BlockSpec((block_m, block_f), lambda k, j, t: (t, j)),   # g
+    ]
+    out_dtype = w_dtype if w_dtype is not None else x.dtype
+    if v is None:
+        kernel = functools.partial(_gemm_dw_kernel, nk=nk, db=db,
+                                   rank2=False)
+        specs, args = [adapter_spec], (u, x, g)
+    else:
+        kernel = functools.partial(_dw_rank2_shim, nk=nk, db=db)
+        specs, args = [adapter_spec, adapter_spec], (u, v, x, g)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=specs + data_specs,
+        out_specs=pl.BlockSpec((block_d, block_f), lambda k, j, t: (k, j)),
+        out_shape=jax.ShapeDtypeStruct((d, f), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_d, block_f), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Batched bank variants (multi-tenant training)
+# ---------------------------------------------------------------------------
+
+def _gemm_dx_batched_kernel(ids_ref, u_ref, x_ref, w_ref, g_ref, dx_ref,
+                            gu_ref, acc_ref, gu_acc_ref, *, nk: int,
+                            db: int):
+    del ids_ref  # consumed by the index maps
+    j, k, f = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+    nf = pl.num_programs(3)
+
+    @pl.when(f == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((j == 0) & (k == 0) & (f == 0))
+    def _init_gu():
+        gu_acc_ref[...] = jnp.zeros_like(gu_acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        g_ref[0].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(f == nf - 1)
+    def _finish_tile():
+        un = unit_rows(u_ref[0, pl.dslice(k * nk, nk), :]
+                       .astype(jnp.float32))
+        ts, td = acc_ref.shape
+        dxrb = acc_ref[...].reshape(ts, nk, db)
+        xb = x_ref[0].astype(jnp.float32).reshape(ts, nk, db)
+        dx, (ghat,) = _dx_tile(xb, dxrb, [(un, -2.0)])
+        dx_ref[0] = dx.reshape(ts, td).astype(dx_ref.dtype)
+        gu_acc_ref[pl.dslice(k * nk, nk), :] += ghat
+
+    last = ((j == pl.num_programs(1) - 1) & (k == pl.num_programs(2) - 1)
+            & (f == nf - 1))
+
+    @pl.when(last)
+    def _emit_gu():
+        # un-normalized dL/dû for THIS sequence; the wrapper scatter-adds
+        # into the bank and applies the chain rule per bank row.
+        gu_ref[0] = gu_acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_d",
+                                             "block_f", "interpret"))
+def householder_gemm_batched_bwd_pallas(x: jax.Array, w: jax.Array,
+                                        u_bank: jax.Array, ids: jax.Array,
+                                        g: jax.Array, *, block_s: int = 128,
+                                        block_d: int = 512,
+                                        block_f: int = 128,
+                                        interpret: bool | None = None):
+    """(dx, ĝ_seq) for the fused bank GEMM.  x: (B, S, d); w: (d, f);
+    u_bank: (A, n, db); ids: (B,); g: (B, S, f).  ĝ_seq: (B, n, db) f32
+    per-sequence un-normalized dL/dû partials."""
+    from repro.core.execute import _interpret, largest_divisor
+    b, s, d = x.shape
+    d2, f = w.shape
+    _, n, db = u_bank.shape
+    assert d == d2 and n * db == d and g.shape == (b, s, f)
+    block_s = largest_divisor(s, block_s)
+    block_f = largest_divisor(f, block_f)
+    block_d = min(block_d, d)
+    if block_d % db:
+        block_d = db * max(1, block_d // db)
+    nk = block_d // db
+    assert d % block_d == 0, "caller guarantees whole K-blocks (ops.py)"
+    grid = (b, s // block_s, d // block_d, f // block_f)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n, db),
+                         lambda i, j, k, f, ids_ref: (ids_ref[i], 0, 0)),
+            pl.BlockSpec((1, block_s, block_d),
+                         lambda i, j, k, f, ids_ref: (i, j, k)),
+            pl.BlockSpec((block_d, block_f),
+                         lambda i, j, k, f, ids_ref: (k, f)),
+            pl.BlockSpec((1, block_s, block_f),
+                         lambda i, j, k, f, ids_ref: (i, j, f)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s, block_d),
+                         lambda i, j, k, f, ids_ref: (i, j, k)),
+            pl.BlockSpec((1, n, db),
+                         lambda i, j, k, f, ids_ref: (i, 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_s, block_d), jnp.float32),
+                        pltpu.VMEM((n, db), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_gemm_dx_batched_kernel, nk=nk, db=db),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, s, d), x.dtype),
+                   jax.ShapeDtypeStruct((b, n, db), jnp.float32)],
+        interpret=_interpret(interpret),
+    )(ids.astype(jnp.int32), u_bank, x, w, g)
+
+
+def _gemm_dw_batched_kernel(ids_ref, u_ref, x_ref, g_ref, dw_ref, acc_ref,
+                            *, nk: int, db: int):
+    del ids_ref
+    k = pl.program_id(0)
+    i, j = pl.program_id(2), pl.program_id(3)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    un = unit_rows(u_ref[0, pl.dslice(k * nk, nk), :].astype(jnp.float32))
+    x = x_ref[0].astype(jnp.float32)
+    ts, td = x.shape
+    xb = x.reshape(ts, nk, db)
+    xr = xb - 2.0 * jnp.einsum("tnb,nb->tn", xb, un)[..., None] * un[None]
+    acc_ref[...] += jax.lax.dot_general(
+        xr.reshape(ts, td), g_ref[0].astype(jnp.float32),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when((i == pl.num_programs(2) - 1) & (j == pl.num_programs(3) - 1))
+    def _done():
+        dw_ref[...] = acc_ref[...].astype(dw_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_d",
+                                             "block_f", "w_dtype",
+                                             "interpret"))
+def householder_gemm_batched_dw_pallas(x: jax.Array, u_bank: jax.Array,
+                                       ids: jax.Array, g: jax.Array, *,
+                                       block_s: int = 128,
+                                       block_d: int = 512,
+                                       block_f: int = 128, w_dtype=None,
+                                       interpret: bool | None = None
+                                       ) -> jax.Array:
+    """dw = Σ_b R_b(x_b)ᵀ @ g_b (shared frozen weight, per-tenant R)."""
+    from repro.core.execute import _interpret, largest_divisor
+    b, s, d = x.shape
+    _, n, db = u_bank.shape
+    f = g.shape[-1]
+    assert n * db == d and g.shape[:2] == (b, s)
+    block_s = largest_divisor(s, block_s)
+    block_f = largest_divisor(f, block_f)
+    block_d = min(block_d, d)
+    if block_d % db:
+        block_d = db * max(1, block_d // db)
+    nk = block_d // db
+    assert d % block_d == 0, "caller guarantees whole K-blocks (ops.py)"
+    grid = (d // block_d, f // block_f, b, s // block_s)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n, db),
+                         lambda k, jf, i, j, ids_ref: (ids_ref[i], 0, 0)),
+            pl.BlockSpec((1, block_s, block_d),
+                         lambda k, jf, i, j, ids_ref: (i, j, k)),
+            pl.BlockSpec((1, block_s, block_f),
+                         lambda k, jf, i, j, ids_ref: (i, j, jf)),
+        ],
+        out_specs=pl.BlockSpec((block_d, block_f),
+                               lambda k, jf, i, j, ids_ref: (k, jf)),
+        scratch_shapes=[pltpu.VMEM((block_d, block_f), jnp.float32)],
+    )
+    out_dtype = w_dtype if w_dtype is not None else x.dtype
+    return pl.pallas_call(
+        functools.partial(_gemm_dw_batched_kernel, nk=nk, db=db),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((d, f), out_dtype),
+        interpret=_interpret(interpret),
+    )(ids.astype(jnp.int32), u_bank, x, g)

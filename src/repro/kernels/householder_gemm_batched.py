@@ -64,17 +64,13 @@ def householder_gemm_batched_pallas(x: jax.Array, w: jax.Array,
     """x: (B, S, d); w: (d, f); u_bank: (A, n, db), n*db == d; ids: (B,).
 
     Returns reflect(x[b], u_bank[ids[b]]) @ w for every sequence b."""
-    from repro.core.execute import _interpret
+    from repro.core.execute import _interpret, largest_divisor
     b, s, d = x.shape
     d2, f = w.shape
     _, n, db = u_bank.shape
     assert d == d2 and n * db == d, (n, db, d)
-    block_s = min(block_s, s)
-    while s % block_s:                       # odd decode shapes must work
-        block_s -= 1
-    block_f = min(block_f, f)
-    while f % block_f:
-        block_f -= 1
+    block_s = largest_divisor(s, block_s)   # odd decode shapes must work
+    block_f = largest_divisor(f, block_f)
     block_k = min(block_k, d)
     if block_k % db:
         block_k = db * max(1, block_k // db)

@@ -22,9 +22,20 @@ from repro.kernels.etherplus_merge import (etherplus_merge_left_pallas,
 from repro.kernels.etherplus_reflect_batched import (
     etherplus_reflect_batched_pallas)
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gemm_bwd import (householder_gemm_batched_bwd_pallas,
+                                    householder_gemm_batched_dw_pallas,
+                                    reflect_gemm_dx_pallas,
+                                    reflect_gemm_dw_pallas)
 from repro.kernels.householder_gemm import householder_gemm_pallas
 from repro.kernels.householder_gemm_batched import (
     householder_gemm_batched_pallas)
+from repro.kernels.merge_bwd import (merge_left_bwd_pallas,
+                                     merge_right_bwd_pallas)
+from repro.kernels.reflect_bwd import (ether_reflect_bwd_pallas,
+                                       etherplus_reflect_bwd_pallas,
+                                       norm_chain)
+from repro.kernels.reflect_bwd_batched import (
+    ether_reflect_batched_bwd_pallas, etherplus_reflect_batched_bwd_pallas)
 
 
 def ether_reflect(x: jax.Array, u: jax.Array, *, block_t: int = 256,
@@ -158,6 +169,191 @@ def ether_merge(w: jax.Array, u: jax.Array, *,
         return ref.ref_ether_merge(w, u)
     return ether_merge_pallas(w, u, block_f=bf,
                               interpret=_interpret(interpret))
+
+
+# ---------------------------------------------------------------------------
+# Hand-derived backwards (*_bwd ops).  Same contract as the forwards:
+# tileable shapes hit the Pallas kernels, anything else falls back to
+# the ref-AD oracles in ref.py.  Cotangent tuples are ordered like the
+# forward op's primals; int operands (tenant ids) get float0 zeros.
+# ---------------------------------------------------------------------------
+
+def _float0_like(a):
+    import numpy as np
+    from jax.dtypes import float0
+    return np.zeros(a.shape, float0)
+
+
+def _bank_grad(bank: jax.Array, ids: jax.Array, ghat_seq: jax.Array):
+    """Finish a bank cotangent from per-sequence dL/dû partials:
+    scatter-add over tenant ids, then the ε-normalization chain rule per
+    bank row (linear in dL/dû, so add-then-chain ≡ chain-then-add)."""
+    gsum = jnp.zeros(bank.shape, jnp.float32).at[ids].add(ghat_seq)
+    return norm_chain(bank.astype(jnp.float32), gsum).astype(bank.dtype)
+
+
+def ether_reflect_bwd(x: jax.Array, u: jax.Array, g: jax.Array, *,
+                      block_t: int = 256, interpret: bool | None = None):
+    """(dx, du) for ether_reflect.  x/g: (..., d); u: (n, db)."""
+    import math
+    d = x.shape[-1]
+    t = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
+    from repro.core import execute
+    x2, g2 = x.reshape(t, d), g.reshape(t, d)
+    if not execute.supports("ether_reflect", x, u):
+        dx, du = ref.ref_ether_reflect_bwd(x2, u, g2)
+        return dx.reshape(x.shape), du
+    dx, du = ether_reflect_bwd_pallas(x2, u, g2,
+                                      block_t=min(block_t, t),
+                                      interpret=interpret)
+    return dx.reshape(x.shape), du
+
+
+def householder_gemm_bwd(x: jax.Array, w: jax.Array, u: jax.Array,
+                         g: jax.Array, *, interpret: bool | None = None):
+    """(dx, dw, du) for householder_gemm.  x: (..., d); w: (d, f);
+    g: (..., f)."""
+    import math
+    d, f = w.shape
+    lead = x.shape[:-1]
+    t = math.prod(lead) if lead else 1
+    from repro.core import execute
+    x2, g2 = x.reshape(t, d), g.reshape(t, f)
+    n, db = u.shape
+    if not execute.supports("householder_gemm", x, w, u):
+        dx, dw, du = ref.ref_householder_gemm_bwd(x2, w, u, g2)
+        return dx.reshape(x.shape), dw, du
+    bm = 128 if t % 128 == 0 else t
+    bf = 128
+    bk = db * max(1, min(512, d) // db)
+    dx, du = reflect_gemm_dx_pallas(x2, w, u, g2, block_m=bm, block_d=bk,
+                                    block_f=bf, interpret=interpret)
+    dw = reflect_gemm_dw_pallas(x2, u, g2, block_m=bm, block_d=bk,
+                                block_f=bf, w_dtype=w.dtype,
+                                interpret=interpret)
+    return dx.reshape(x.shape), dw, du
+
+
+def etherplus_gemm_bwd(x: jax.Array, w: jax.Array, u1: jax.Array,
+                       v1: jax.Array, u2: jax.Array | None,
+                       v2: jax.Array | None, g: jax.Array, *,
+                       interpret: bool | None = None):
+    """(dx, dw, du1, dv1, du2, dv2) for the fused ETHER+ linear.
+
+    Two-sided adapters recompute the pre-epilogue intermediate
+    y0 = (H⁺x) @ W with the one-sided forward kernel (flash-attention
+    style recompute — the forward never writes y0 to HBM)."""
+    import math
+    d, f = w.shape
+    lead = x.shape[:-1]
+    t = math.prod(lead) if lead else 1
+    x2, g2 = x.reshape(t, d), g.reshape(t, f)
+    from repro.core import execute
+    n, db = u1.shape
+    db_out = u2.shape[1] if u2 is not None else None
+    bm, bf, bk = gemm_tiles(t, d, f, db, db_out)
+    if not execute.supports("etherplus_gemm", x, w, u1, v1, u2, v2):
+        out = ref.ref_etherplus_gemm_bwd(x2, w, u1, v1, u2, v2, g2)
+        return (out[0].reshape(x.shape),) + tuple(out[1:])
+    if u2 is None:
+        dy0, du2, dv2 = g2, None, None
+    else:
+        y0 = etherplus_gemm_pallas(x2, w, u1, v1, block_m=bm, block_f=bf,
+                                   block_k=bk, interpret=interpret)
+        dy0, du2, dv2 = etherplus_reflect_bwd_pallas(y0, u2, v2, g2,
+                                                     interpret=interpret)
+    dx, du1, dv1 = reflect_gemm_dx_pallas(x2, w, u1, dy0, v1, block_m=bm,
+                                          block_d=bk, block_f=bf,
+                                          interpret=interpret)
+    dw = reflect_gemm_dw_pallas(x2, u1, dy0, v1, block_m=bm, block_d=bk,
+                                block_f=bf, w_dtype=w.dtype,
+                                interpret=interpret)
+    return dx.reshape(x.shape), dw, du1, dv1, du2, dv2
+
+
+def ether_merge_bwd(w: jax.Array, u: jax.Array, g: jax.Array, *,
+                    interpret: bool | None = None):
+    """(dw, du) for ether_merge.  w/g: (d, f); u: (n, db)."""
+    from repro.core import execute
+    d, f = w.shape
+    if not execute.supports("ether_merge", w, u):
+        return ref.ref_ether_merge_bwd(w, u, g)
+    bf = 512 if f % 512 == 0 else 128
+    return merge_left_bwd_pallas(w, u, g, block_f=bf, interpret=interpret)
+
+
+def etherplus_merge_bwd(w: jax.Array, u1: jax.Array, v1: jax.Array,
+                        u2: jax.Array | None, v2: jax.Array | None,
+                        g: jax.Array, *, interpret: bool | None = None):
+    """(dw, du1, dv1, du2, dv2) for the ETHER+ absorption."""
+    from repro.core import execute
+    if not execute.supports("etherplus_merge", w, u1, v1, u2, v2):
+        return ref.ref_etherplus_merge_bwd(w, u1, v1, u2, v2, g)
+    if u2 is None:
+        dw, du1, dv1 = merge_left_bwd_pallas(w, u1, g, v1,
+                                             interpret=interpret)
+        return dw, du1, dv1, None, None
+    w1 = etherplus_merge_left_pallas(w, u1, v1,
+                                     interpret=_interpret(interpret))
+    dw1, du2, dv2 = merge_right_bwd_pallas(w1, u2, v2, g,
+                                           interpret=interpret)
+    dw, du1, dv1 = merge_left_bwd_pallas(w, u1, dw1, v1,
+                                         interpret=interpret)
+    return dw, du1, dv1, du2, dv2
+
+
+def ether_reflect_batched_bwd(x: jax.Array, u_bank: jax.Array,
+                              ids: jax.Array, g: jax.Array, *,
+                              block_s: int = 128,
+                              interpret: bool | None = None):
+    """(dx, du_bank, dids) for the bank gather-and-reflect."""
+    from repro.core import execute
+    _, s, d = x.shape
+    if not execute.supports("ether_reflect_batched", x, u_bank, ids):
+        return ref.ref_ether_reflect_batched_bwd(x, u_bank, ids, g)
+    dx, ghat = ether_reflect_batched_bwd_pallas(x, u_bank, ids, g,
+                                                block_s=min(block_s, s),
+                                                interpret=interpret)
+    return dx, _bank_grad(u_bank, ids, ghat), _float0_like(ids)
+
+
+def householder_gemm_batched_bwd(x: jax.Array, w: jax.Array,
+                                 u_bank: jax.Array, ids: jax.Array,
+                                 g: jax.Array, *,
+                                 interpret: bool | None = None):
+    """(dx, dw, du_bank, dids) for the fused bank GEMM."""
+    from repro.core import execute
+    _, s, d = x.shape
+    _, f = w.shape
+    _, n, db = u_bank.shape
+    bs, bf, bk = gemm_tiles(s, d, f, db)
+    if not execute.supports("householder_gemm_batched", x, w, u_bank, ids):
+        return ref.ref_householder_gemm_batched_bwd(x, w, u_bank, ids, g)
+    dx, ghat = householder_gemm_batched_bwd_pallas(
+        x, w, u_bank, ids, g, block_s=bs, block_d=bk, block_f=bf,
+        interpret=interpret)
+    dw = householder_gemm_batched_dw_pallas(
+        x, u_bank, ids, g, block_s=bs, block_d=bk, block_f=bf,
+        w_dtype=w.dtype, interpret=interpret)
+    return dx, dw, _bank_grad(u_bank, ids, ghat), _float0_like(ids)
+
+
+def etherplus_reflect_batched_bwd(x: jax.Array, u_bank: jax.Array,
+                                  v_bank: jax.Array, ids: jax.Array,
+                                  g: jax.Array, *, block_s: int = 128,
+                                  interpret: bool | None = None):
+    """(dx, du_bank, dv_bank, dids) for the bank rank-2 reflect."""
+    from repro.core import execute
+    _, s, d = x.shape
+    if not execute.supports("etherplus_reflect_batched", x, u_bank,
+                            v_bank, ids):
+        return ref.ref_etherplus_reflect_batched_bwd(x, u_bank, v_bank,
+                                                     ids, g)
+    dx, gu, gv = etherplus_reflect_batched_bwd_pallas(
+        x, u_bank, v_bank, ids, g, block_s=min(block_s, s),
+        interpret=interpret)
+    return (dx, _bank_grad(u_bank, ids, gu), _bank_grad(v_bank, ids, gv),
+            _float0_like(ids))
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -124,6 +124,64 @@ def ref_ether_merge(w, u):
     return (wb - 2.0 * uh[:, :, None] * proj[:, None, :]).reshape(d, f)
 
 
+# ---------------------------------------------------------------------------
+# Backward references — ground truth for the hand-derived *_bwd kernels.
+#
+# Each is literally XLA's AD of the forward reference above: the Pallas
+# backward kernels must reproduce these cotangents (same residuals, same
+# ε-normalization chain rule), so the oracle *is* ref-AD.  They are also
+# the fallback the ops.py bwd wrappers use for non-tileable shapes.
+# ---------------------------------------------------------------------------
+
+def ref_ether_reflect_bwd(x, u, g):
+    """(dx, du) for y = ref_ether_reflect(x, u) under cotangent g."""
+    return jax.vjp(ref_ether_reflect, x, u)[1](g)
+
+
+def ref_householder_gemm_bwd(x, w, u, g):
+    """(dx, dw, du) for y = reflect(x) @ w under cotangent g."""
+    return jax.vjp(ref_householder_gemm, x, w, u)[1](g)
+
+
+def ref_ether_merge_bwd(w, u, g):
+    """(dw, du) for w' = H_B w under cotangent g."""
+    return jax.vjp(ref_ether_merge, w, u)[1](g)
+
+
+def ref_ether_reflect_batched_bwd(x, u_bank, ids, g):
+    """(dx, du_bank, dids) — dids is float0 (int operand)."""
+    return jax.vjp(ref_ether_reflect_batched, x, u_bank, ids)[1](g)
+
+
+def ref_etherplus_gemm_bwd(x, w, u1, v1, u2, v2, g):
+    """(dx, dw, du1, dv1, du2, dv2); du2/dv2 are None one-sided."""
+    if u2 is None:
+        fn = lambda x, w, u1, v1: ref_etherplus_gemm(x, w, u1, v1)
+        dx, dw, du1, dv1 = jax.vjp(fn, x, w, u1, v1)[1](g)
+        return dx, dw, du1, dv1, None, None
+    return jax.vjp(ref_etherplus_gemm, x, w, u1, v1, u2, v2)[1](g)
+
+
+def ref_householder_gemm_batched_bwd(x, w, u_bank, ids, g):
+    """(dx, dw, du_bank, dids) for the fused bank GEMM."""
+    return jax.vjp(ref_householder_gemm_batched, x, w, u_bank, ids)[1](g)
+
+
+def ref_etherplus_reflect_batched_bwd(x, u_bank, v_bank, ids, g):
+    """(dx, du_bank, dv_bank, dids) for the bank rank-2 reflect."""
+    return jax.vjp(ref_etherplus_reflect_batched, x, u_bank, v_bank,
+                   ids)[1](g)
+
+
+def ref_etherplus_merge_bwd(w, u1, v1, u2, v2, g):
+    """(dw, du1, dv1, du2, dv2); du2/dv2 are None one-sided."""
+    if u2 is None:
+        fn = lambda w, u1, v1: ref_etherplus_merge(w, u1, v1)
+        dw, du1, dv1 = jax.vjp(fn, w, u1, v1)[1](g)
+        return dw, du1, dv1, None, None
+    return jax.vjp(ref_etherplus_merge, w, u1, v1, u2, v2)[1](g)
+
+
 def ref_flash_attention(q, k, v, *, causal=True, window=None, scale=None):
     """Exact softmax attention. q: (B, H, S, D); k/v: (B, Hkv, T, D).
 

@@ -1,0 +1,183 @@
+"""Pallas TPU kernels: hand-derived backwards for the token reflections.
+
+Pallas has no autodiff (and interpret mode's AD raises outright), so the
+kernel-backed training path needs explicit backward kernels.  ETHER's
+multiplicative structure makes them cheap to derive: with û = u/(‖u‖+ε)
+and the blockwise generalized update
+
+    y = x + c_u û(ûᵀx) [+ c_v v̂(v̂ᵀx)]            (rank-1: c_u = −2;
+                                                   ETHER+: c_u=−1, c_v=+1)
+
+the operator is symmetric, so for a cotangent G:
+
+    dx   = G + c_u û(ûᵀG) [+ c_v v̂(v̂ᵀG)]          (reapply the transform)
+    dL/dû = c_u Σ_t [ (ûᵀx_t) G_t + (ûᵀG_t) x_t ]   (and likewise for v̂)
+    du   = dL/dû/s − (u·dL/dû) u/(r s²),  r = ‖u‖, s = r + ε
+
+i.e. the backward reuses the forward's normalized directions as its only
+residuals — no intermediate activations are saved, and nothing is
+re-derived by differentiating the jnp reference.
+
+Grid: (T/block_t,).  dx is tile-local; dL/dû accumulates in a persistent
+f32 VMEM scratch across all row tiles (the TPU grid is sequential on a
+core) and the ε-normalization chain rule is applied once at the final
+step.  VMEM per step ≈ 3·block_t·d·4B + O(d) for the adapter vectors.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def norm_chain(u, ghat, eps: float = 1e-8):
+    """Pull dL/dû back through û = u/(‖u‖+ε) on the last axis (f32).
+
+    This is exactly XLA's AD of the reference normalization, so kernel
+    backwards that use it agree with ref-AD to rounding error."""
+    r = jnp.sqrt(jnp.sum(u * u, axis=-1, keepdims=True))
+    s = r + eps
+    dot = jnp.sum(u * ghat, axis=-1, keepdims=True)
+    return ghat / s - dot * u / (r * s * s)
+
+
+def unit_rows(u, eps: float = 1e-8):
+    """Row-normalize (f32) — matches the forward kernels' û."""
+    return u / (jnp.sqrt(jnp.sum(u * u, axis=-1, keepdims=True)) + eps)
+
+
+def reflect_bwd_tile(xb, gb, un, coeff):
+    """Shared per-tile math: (dx_b, ĝ_u) for one rank-1 direction.
+
+    xb/gb: (T, n, db) f32; un: (n, db) unit rows.  Returns the dx
+    contribution of this direction *excluding* the identity term and the
+    un-normalized dL/dû partial for this tile."""
+    pg = jnp.einsum("tnb,nb->tn", gb, un)
+    px = jnp.einsum("tnb,nb->tn", xb, un)
+    dx_term = coeff * pg[..., None] * un[None]
+    ghat = coeff * (jnp.einsum("tn,tnb->nb", px, gb)
+                    + jnp.einsum("tn,tnb->nb", pg, xb))
+    return dx_term, ghat
+
+
+def _r1_bwd_kernel(u_ref, x_ref, g_ref, dx_ref, du_ref, acc_ref, *,
+                   n: int, db: int, coeff: float):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    u = u_ref[...].astype(jnp.float32)
+    un = unit_rows(u)
+    tm = x_ref.shape[0]
+    xb = x_ref[...].astype(jnp.float32).reshape(tm, n, db)
+    gb = g_ref[...].astype(jnp.float32).reshape(tm, n, db)
+    dx_term, ghat = reflect_bwd_tile(xb, gb, un, coeff)
+    dx_ref[...] = (gb + dx_term).reshape(tm, n * db).astype(dx_ref.dtype)
+    acc_ref[...] += ghat
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _done():
+        du_ref[...] = norm_chain(u, acc_ref[...]).astype(du_ref.dtype)
+
+
+def _r2_bwd_kernel(u_ref, v_ref, x_ref, g_ref, dx_ref, du_ref, dv_ref,
+                   accu_ref, accv_ref, *, n: int, db: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+        accv_ref[...] = jnp.zeros_like(accv_ref)
+
+    u = u_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    un, vn = unit_rows(u), unit_rows(v)
+    tm = x_ref.shape[0]
+    xb = x_ref[...].astype(jnp.float32).reshape(tm, n, db)
+    gb = g_ref[...].astype(jnp.float32).reshape(tm, n, db)
+    dxu, ghu = reflect_bwd_tile(xb, gb, un, -1.0)
+    dxv, ghv = reflect_bwd_tile(xb, gb, vn, +1.0)
+    dx_ref[...] = (gb + dxu + dxv).reshape(tm, n * db).astype(dx_ref.dtype)
+    accu_ref[...] += ghu
+    accv_ref[...] += ghv
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _done():
+        du_ref[...] = norm_chain(u, accu_ref[...]).astype(du_ref.dtype)
+        dv_ref[...] = norm_chain(v, accv_ref[...]).astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def ether_reflect_bwd_pallas(x: jax.Array, u: jax.Array, g: jax.Array, *,
+                             block_t: int = 256,
+                             interpret: bool | None = None):
+    """x/g: (T, d); u: (n, db), n*db == d. Returns (dx, du)."""
+    from repro.core.execute import _interpret, largest_divisor
+    interpret = _interpret(interpret)
+    t, d = x.shape
+    n, db = u.shape
+    assert n * db == d and g.shape == x.shape
+    block_t = largest_divisor(t, block_t)
+    grid = (t // block_t,)
+    return pl.pallas_call(
+        functools.partial(_r1_bwd_kernel, n=n, db=db, coeff=-2.0),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, db), lambda i: (0, 0)),
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, db), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), x.dtype),
+            jax.ShapeDtypeStruct((n, db), u.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, db), jnp.float32)],
+        interpret=interpret,
+    )(u, x, g)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def etherplus_reflect_bwd_pallas(x: jax.Array, u: jax.Array, v: jax.Array,
+                                 g: jax.Array, *, block_t: int = 256,
+                                 interpret: bool | None = None):
+    """Rank-2 H⁺ backward. x/g: (T, d); u/v: (n, db). → (dx, du, dv)."""
+    from repro.core.execute import _interpret, largest_divisor
+    interpret = _interpret(interpret)
+    t, d = x.shape
+    n, db = u.shape
+    assert n * db == d and u.shape == v.shape and g.shape == x.shape
+    block_t = largest_divisor(t, block_t)
+    grid = (t // block_t,)
+    return pl.pallas_call(
+        functools.partial(_r2_bwd_kernel, n=n, db=db),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, db), lambda i: (0, 0)),
+            pl.BlockSpec((n, db), lambda i: (0, 0)),
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, db), lambda i: (0, 0)),
+            pl.BlockSpec((n, db), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), x.dtype),
+            jax.ShapeDtypeStruct((n, db), u.dtype),
+            jax.ShapeDtypeStruct((n, db), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, db), jnp.float32),
+                        pltpu.VMEM((n, db), jnp.float32)],
+        interpret=interpret,
+    )(u, v, x, g)

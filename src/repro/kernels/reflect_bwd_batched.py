@@ -1,0 +1,154 @@
+"""Pallas TPU kernels: backwards for the per-tenant bank reflections.
+
+The batched analogues of ``reflect_bwd``: every sequence gathers its
+tenant's hyperplane vectors via scalar-prefetch indexing (same indexed
+DMA as the forward), computes its tile-local dx, and accumulates a
+*per-sequence* un-normalized dL/dû partial over its S tiles.  The bank
+cotangent is finished by the ops.py wrapper:
+
+    du_bank = norm_chain(u_bank, zeros.at[ids].add(ĝ_seq))
+
+scatter-add first, ε-normalization chain second — valid because the
+chain rule is linear in dL/dû and all sequences with the same tenant id
+share one bank row.  This reproduces ref-AD's gather-vjp exactly, so
+duplicate tenant ids accumulate rather than overwrite.
+
+Grid: (B, S/block_s).  ĝ_seq rides in a persistent (n, db) f32 scratch,
+re-zeroed at each sequence's first S tile and emitted at its last.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.reflect_bwd import reflect_bwd_tile, unit_rows
+
+
+def _r1b_bwd_kernel(ids_ref, u_ref, x_ref, g_ref, dx_ref, gu_ref,
+                    acc_ref, *, n: int, db: int):
+    del ids_ref  # consumed by the index maps
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    un = unit_rows(u_ref[0].astype(jnp.float32))
+    bs = x_ref.shape[1]
+    xb = x_ref[0].astype(jnp.float32).reshape(bs, n, db)
+    gb = g_ref[0].astype(jnp.float32).reshape(bs, n, db)
+    term, ghat = reflect_bwd_tile(xb, gb, un, -2.0)
+    dx_ref[0] = (gb + term).reshape(bs, n * db).astype(dx_ref.dtype)
+    acc_ref[...] += ghat
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _emit():
+        gu_ref[0] = acc_ref[...]
+
+
+def _r2b_bwd_kernel(ids_ref, u_ref, v_ref, x_ref, g_ref, dx_ref, gu_ref,
+                    gv_ref, accu_ref, accv_ref, *, n: int, db: int):
+    del ids_ref
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+        accv_ref[...] = jnp.zeros_like(accv_ref)
+
+    un = unit_rows(u_ref[0].astype(jnp.float32))
+    vn = unit_rows(v_ref[0].astype(jnp.float32))
+    bs = x_ref.shape[1]
+    xb = x_ref[0].astype(jnp.float32).reshape(bs, n, db)
+    gb = g_ref[0].astype(jnp.float32).reshape(bs, n, db)
+    tu, ghu = reflect_bwd_tile(xb, gb, un, -1.0)
+    tv, ghv = reflect_bwd_tile(xb, gb, vn, +1.0)
+    dx_ref[0] = (gb + tu + tv).reshape(bs, n * db).astype(dx_ref.dtype)
+    accu_ref[...] += ghu
+    accv_ref[...] += ghv
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _emit():
+        gu_ref[0] = accu_ref[...]
+        gv_ref[0] = accv_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def ether_reflect_batched_bwd_pallas(x: jax.Array, u_bank: jax.Array,
+                                     ids: jax.Array, g: jax.Array, *,
+                                     block_s: int = 128,
+                                     interpret: bool | None = None):
+    """x/g: (B, S, d); u_bank: (A, n, db); ids: (B,).
+    Returns (dx, ĝ_seq (B, n, db) f32 un-normalized partials)."""
+    from repro.core.execute import _interpret, largest_divisor
+    b, s, d = x.shape
+    _, n, db = u_bank.shape
+    assert n * db == d and g.shape == x.shape
+    block_s = largest_divisor(s, block_s)
+    grid = (b, s // block_s)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n, db), lambda i, j, ids_ref: (ids_ref[i], 0, 0)),
+            pl.BlockSpec((1, block_s, d), lambda i, j, ids_ref: (i, j, 0)),
+            pl.BlockSpec((1, block_s, d), lambda i, j, ids_ref: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s, d), lambda i, j, ids_ref: (i, j, 0)),
+            pl.BlockSpec((1, n, db), lambda i, j, ids_ref: (i, 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, db), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_r1b_bwd_kernel, n=n, db=db),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, s, d), x.dtype),
+                   jax.ShapeDtypeStruct((b, n, db), jnp.float32)],
+        interpret=_interpret(interpret),
+    )(ids.astype(jnp.int32), u_bank, x, g)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def etherplus_reflect_batched_bwd_pallas(x: jax.Array, u_bank: jax.Array,
+                                         v_bank: jax.Array, ids: jax.Array,
+                                         g: jax.Array, *,
+                                         block_s: int = 128,
+                                         interpret: bool | None = None):
+    """Rank-2 bank reflect backward.  Returns (dx, ĝu_seq, ĝv_seq)."""
+    from repro.core.execute import _interpret, largest_divisor
+    b, s, d = x.shape
+    _, n, db = u_bank.shape
+    assert n * db == d and u_bank.shape == v_bank.shape
+    block_s = largest_divisor(s, block_s)
+    grid = (b, s // block_s)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n, db), lambda i, j, ids_ref: (ids_ref[i], 0, 0)),
+            pl.BlockSpec((1, n, db), lambda i, j, ids_ref: (ids_ref[i], 0, 0)),
+            pl.BlockSpec((1, block_s, d), lambda i, j, ids_ref: (i, j, 0)),
+            pl.BlockSpec((1, block_s, d), lambda i, j, ids_ref: (i, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s, d), lambda i, j, ids_ref: (i, j, 0)),
+            pl.BlockSpec((1, n, db), lambda i, j, ids_ref: (i, 0, 0)),
+            pl.BlockSpec((1, n, db), lambda i, j, ids_ref: (i, 0, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, db), jnp.float32),
+                        pltpu.VMEM((n, db), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_r2b_bwd_kernel, n=n, db=db),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, s, d), x.dtype),
+                   jax.ShapeDtypeStruct((b, n, db), jnp.float32),
+                   jax.ShapeDtypeStruct((b, n, db), jnp.float32)],
+        interpret=_interpret(interpret),
+    )(ids.astype(jnp.int32), u_bank, v_bank, x, g)

@@ -464,4 +464,9 @@ def test_kernels_suite_covers_every_registered_pair():
     # iters=1: this asserts the coverage contract, not the timings
     payload = kernels_suite.run_suite(shapes="tiny", iters=1)
     covered = {(e["op"], e["backend"]) for e in payload["entries"]}
-    assert covered == set(execute._REGISTRY)
+    fwd_pairs = {p for p in execute._REGISTRY if not execute.is_bwd_op(p[0])}
+    assert covered == fwd_pairs
+    # every forward op must have a registered backward with both
+    # backends — the train suite (BENCH_train.json) times those rows
+    for op, _ in fwd_pairs:
+        assert set(execute.available(op + "_bwd")) == {"jnp", "pallas"}, op
