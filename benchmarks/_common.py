@@ -1,8 +1,18 @@
-"""Shared benchmark utilities: timing, pretrain→adapt harness."""
+"""Shared benchmark utilities: timing, suite row-keying, pretrain→adapt
+harness."""
 
 from __future__ import annotations
 
 import time
+
+
+def entry_key(e: dict) -> tuple:
+    """Identity of one tracked-suite row — shared by every suite
+    (kernels/train/serve) and by the ``run.py --compare`` regression
+    gate, so all suites flow through one gate code path.  A row is the
+    same row across runs iff (op, backend, kind, what, shape) match."""
+    return (e["op"], e["backend"], e["kind"], e.get("what", ""),
+            tuple(sorted(e["shape"].items())))
 
 import jax
 import jax.numpy as jnp

@@ -1,22 +1,30 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV.
 """Benchmark harness — one module per paper table/figure plus the
-roofline report and the tracked kernel/train suites.
+roofline report and the tracked kernel/train/serve suites.
 
     python -m benchmarks.run [--only substr]          # paper tables
     python -m benchmarks.run --suite kernels \
         --json BENCH_kernels.json                     # kernel suite
     python -m benchmarks.run --suite train \
         --json BENCH_train.json                       # training suite
+    python -m benchmarks.run --suite serve \
+        --json BENCH_serve.json                       # serving suite
     python -m benchmarks.run --suite kernels --shapes tiny \
         --compare BENCH_kernels.json                  # regression gate
 
 The kernel suite times every forward (op, backend) pair registered in
 ``core.execute`` at serving shapes; the train suite times value-and-grad
-plus the ``*_bwd`` backward dispatches and a real trainer step.  Both
-fail if a registered pair is missing an entry; ``--json`` writes the
-tracked payload (regenerate at the repo root with exactly the commands
-above).  ``--include-interp`` opts into timing Pallas interpret-mode
-rows off-TPU (they measure the Python emulator, not the kernel).
+plus the ``*_bwd`` backward dispatches and a real trainer step; the
+serve suite replays the continuous-batching engine (throughput, latency
+tails, tenant churn).  All fail if a registered pair/row is missing an
+entry; ``--json`` writes the tracked payload (regenerate at the repo
+root with exactly the commands above).  ``--include-interp`` opts into
+timing Pallas interpret-mode rows off-TPU (they measure the Python
+emulator, not the kernel).
+
+Every suite emits rows in one shared schema — (op, backend, kind, what,
+shape) keyed by ``benchmarks._common.entry_key`` — so ``--compare``
+gates all of them through the same code path.
 
 ``--compare OLD.json`` re-runs the suite recorded in OLD at the same
 shape grid and exits nonzero if any jnp row got more than ``--threshold``
@@ -54,24 +62,23 @@ MODULES = [
 ]
 
 
+# Tracked suites: one module per suite, every module exposing
+# ``run_suite(shapes, include_interp)`` returning rows in the shared
+# entry_key schema (so the --compare gate below is suite-agnostic).
+SUITES = {
+    "kernels": "benchmarks.kernels_suite",
+    "train": "benchmarks.train_suite",
+    "serve": "benchmarks.serve_suite",
+}
+
+
 def _suite_payload(suite: str, shapes: str, include_interp: bool) -> dict:
-    if suite == "kernels":
-        from benchmarks import kernels_suite
-        return kernels_suite.run_suite(shapes=shapes,
-                                       include_interp=include_interp)
-    from benchmarks import train_suite
-    if shapes == "serving":
-        shapes = "train"              # the train suite's default grid
-    return train_suite.run_suite(shapes=shapes,
-                                 include_interp=include_interp)
+    import importlib
+    mod = importlib.import_module(SUITES[suite])
+    return mod.run_suite(shapes=shapes, include_interp=include_interp)
 
 
 _MAX_MACHINE_FACTOR = 3.0
-
-
-def _entry_key(e: dict) -> tuple:
-    return (e["op"], e["backend"], e["kind"], e.get("what", ""),
-            tuple(sorted(e["shape"].items())))
 
 
 def _compare(old_path: str, fresh: dict, threshold: float,
@@ -87,19 +94,20 @@ def _compare(old_path: str, fresh: dict, threshold: float,
     absolute µs.  Returns the number of failures; baseline rows with no
     fresh counterpart (shape-grid drift) and empty comparisons count as
     failures too — a gate that compares nothing must not pass."""
+    from benchmarks._common import entry_key
     with open(old_path) as f:
         old = json.load(f)
     if old.get("suite") != fresh.get("suite"):
         print(f"# --compare: baseline suite {old.get('suite')!r} != "
               f"fresh {fresh.get('suite')!r}", file=sys.stderr)
         return 1
-    old_rows = {_entry_key(e): e for e in old["entries"]
+    old_rows = {entry_key(e): e for e in old["entries"]
                 if e["backend"] == "jnp"}
     pairs = []
     for e in fresh["entries"]:
         if e["backend"] != "jnp":
             continue
-        base = old_rows.pop(_entry_key(e), None)
+        base = old_rows.pop(entry_key(e), None)
         if base is None:
             print(f"#   NEW   {e['op']}/{e['kind']} {e['shape']}",
                   file=sys.stderr)
@@ -176,7 +184,7 @@ def _run_suite(args) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
-    ap.add_argument("--suite", default=None, choices=("kernels", "train"),
+    ap.add_argument("--suite", default=None, choices=tuple(SUITES),
                     help="run a tracked suite instead of the paper tables")
     ap.add_argument("--json", default=None,
                     help="write the suite payload to this JSON file")

@@ -1,0 +1,216 @@
+"""Tracked serving benchmark suite — the continuous-batching engine's
+perf trajectory, measured the same way the kernel/train suites are.
+
+    PYTHONPATH=src python -m benchmarks.run --suite serve \
+        --json BENCH_serve.json
+
+writes ``BENCH_serve.json`` at the repo root.  Per backend (jnp and
+pallas), five row kinds over the smoke serving model:
+
+``serve_trace`` (what=replay)
+    A full Poisson/Zipf replay through Scheduler+ServeEngine with the
+    tenant universe exceeding bank capacity (mid-traffic onboarding +
+    LRU eviction).  ``us_per_call`` is end-to-end µs per generated
+    token (1e6 / throughput); the row also carries ``tok_s``,
+    ``p50_ms``/``p95_ms`` per-token decode latency and TTFT tails —
+    the headline serving numbers.
+``serve_decode_step`` (what=fused_step)
+    The jitted fused batched decode step alone, all slots active —
+    device-side ms/token floor.
+``serve_prefill_slot`` (what=bucket<P>)
+    Prefill-into-slot admission at the largest pad bucket.
+``tenant_churn`` (what=onboard)
+    Registry onboarding cost: the jitted functional bank-row swap
+    (`AdapterBank.replace_slot`) for a brand-new tenant.
+``serve_merged_step`` (what=merged_baseline)
+    Static-batch decode step against tenant-0-merged weights at the
+    same batch width — the zero-isolation baseline; payload ``derived``
+    records the bank-vs-merged overhead ratio.
+
+Honest labeling off-TPU mirrors kernels_suite: the pallas backend runs
+the interpret-mode emulator there, so pallas rows are timed at the tiny
+grid once with ``mode: interpret`` (compiled on a real TPU); jnp rows
+are the CPU-comparable numbers.  The suite FAILS (SystemExit) if any
+(row kind, backend) pair is missing — CI runs ``--shapes tiny`` as a
+smoke gated against ``benchmarks/baselines/BENCH_serve_tiny.json``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._common import time_us
+
+ROW_OPS = ("serve_trace", "serve_decode_step", "serve_prefill_slot",
+           "tenant_churn", "serve_merged_step")
+
+SERVE_SHAPES = {
+    "serving": dict(slots=8, buckets=(16, 32), gen=16, capacity=16,
+                    universe=64, requests=48, rate=None, seed=0),
+    "tiny": dict(slots=2, buckets=(8,), gen=4, capacity=3, universe=8,
+                 requests=6, rate=None, seed=0),
+}
+
+
+def _build(backend: str, grid: dict):
+    from repro.configs import get_config, peft_targets
+    from repro.core.transforms import PEFTConfig
+    from repro.models import init_model
+    from repro.serving import AdapterRegistry, ServeEngine
+
+    cfg = get_config("smollm-360m", "smoke")
+    peft = PEFTConfig(method="ether", n_blocks=4,
+                      targets=peft_targets("smollm-360m"), backend=backend)
+    rng = jax.random.PRNGKey(0)
+    params = init_model(rng, cfg)
+    registry = AdapterRegistry(params, peft, grid["capacity"],
+                               n_tenants=grid["universe"],
+                               rng=jax.random.fold_in(rng, 1))
+    engine = ServeEngine(cfg, params, registry, peft,
+                         slots=grid["slots"],
+                         prompt_buckets=grid["buckets"],
+                         max_new_tokens=grid["gen"])
+    return cfg, peft, params, registry, engine
+
+
+def _saturated_state(engine, grid):
+    """Engine state with every slot mid-decode (step-timing harness)."""
+    rng = np.random.default_rng(7)
+    state = engine._state
+    b = grid["buckets"][-1]
+    for slot in range(engine.slots):
+        tokens = np.zeros((1, b), np.int32)
+        plen = b // 2
+        tokens[0, :plen] = rng.integers(0, engine.cfg.vocab, plen)
+        state, _ = engine._prefill_fns[b](
+            engine.params, engine.registry.bank, state, tokens,
+            int(plen), int(slot), int(slot % engine.registry.capacity),
+            int(grid["gen"]))
+    return state
+
+
+def run_suite(shapes: str = "serving", include_interp: bool = False,
+              iters: int | None = None) -> dict:
+    """Time the serving rows per backend; returns the JSON payload.
+
+    Raises SystemExit if any (op, backend) row is missing (CI contract).
+    """
+    from repro.core.peft import merge_params, validate_tenant_ids
+    from repro.launch.serve import make_serving_fns
+    from repro.serving import Scheduler, summarize, synthetic_workload
+
+    grid_name = "serving" if shapes == "serving" else "tiny"
+    on_tpu = jax.default_backend() == "tpu"
+    entries = []
+    derived = {}
+    for backend in ("jnp", "pallas"):
+        emulated = backend == "pallas" and not on_tpu
+        grid = dict(SERVE_SHAPES["tiny" if (emulated and not include_interp)
+                                 else grid_name])
+        mode = ("interpret" if emulated else
+                "compiled" if backend == "pallas" else "xla")
+        cfg, peft, params, registry, engine = _build(backend, grid)
+        d = cfg.d_model
+        snap = engine.warmup()
+
+        # --- full replay (throughput + latency tails + churn) --------
+        workload = synthetic_workload(
+            grid["requests"], grid["universe"], vocab=cfg.vocab,
+            rate_rps=grid["rate"], prompt_lens=(4, grid["buckets"][-1]),
+            gen_lens=(2, grid["gen"]), seed=grid["seed"])
+        validate_tenant_ids([r.tenant_id for r in workload],
+                            grid["universe"])
+        done = Scheduler(engine).run(workload,
+                                     clock=lambda: float("inf"))
+        engine.assert_no_retrace(snap)
+        s = summarize(done)
+        entries.append(dict(
+            op="serve_trace", backend=backend, kind="decode",
+            what="replay", mode=mode,
+            shape=dict(batch=grid["slots"], tokens=1, d=d),
+            us_per_call=round(1e6 / max(s["throughput_tok_s"], 1e-9), 2),
+            tok_s=round(s["throughput_tok_s"], 2),
+            p50_ms=round(s["p50_ms_per_token"], 3),
+            p95_ms=round(s["p95_ms_per_token"], 3),
+            ttft_p50_ms=round(s["ttft_p50_ms"], 2),
+            ttft_p95_ms=round(s["ttft_p95_ms"], 2),
+            n_requests=s["n_requests"],
+            evictions=registry.stats["evictions"]))
+
+        # --- fused decode step, all slots active ----------------------
+        state = _saturated_state(engine, grid)
+        us_step = time_us(engine._step_fn, engine.params, registry.bank,
+                          state, iters=iters or 10, reps=3)
+        entries.append(dict(
+            op="serve_decode_step", backend=backend, kind="decode",
+            what="fused_step", mode=mode,
+            shape=dict(batch=grid["slots"], tokens=1, d=d),
+            us_per_call=round(us_step, 2)))
+
+        # --- prefill-into-slot admission ------------------------------
+        b = grid["buckets"][-1]
+        tokens = np.zeros((1, b), np.int32)
+        us_pf = time_us(
+            lambda: engine._prefill_fns[b](
+                engine.params, registry.bank, engine._state, tokens,
+                int(b // 2), int(0), int(0), int(grid["gen"])),
+            iters=iters or 10, reps=3)
+        entries.append(dict(
+            op="serve_prefill_slot", backend=backend, kind="prefill",
+            what=f"bucket{b}", mode=mode,
+            shape=dict(batch=1, tokens=b, d=d),
+            us_per_call=round(us_pf, 2)))
+
+        # --- tenant churn: functional bank-row swap -------------------
+        tree = registry.adapters_for(grid["universe"] - 1)
+        us_swap = time_us(registry._swap, registry.bank, tree,
+                          jnp.int32(0), iters=iters or 10, reps=3)
+        entries.append(dict(
+            op="tenant_churn", backend=backend, kind="swap",
+            what="onboard", mode=mode,
+            shape=dict(batch=1, tokens=1, d=d),
+            us_per_call=round(us_swap, 2)))
+
+        # --- merged single-tenant baseline at the same batch width ----
+        merged = merge_params(params, registry.bank.select(0), peft)
+        pf_m, st_m = make_serving_fns(cfg, None, grid["gen"])
+        batch = {"tokens": jnp.zeros((grid["slots"], b), jnp.int32)}
+        cache, tok = pf_m(merged, None, batch, None)
+        us_merged = time_us(
+            lambda: st_m(merged, None, cache, tok, None)[0],
+            iters=iters or 10, reps=3)
+        entries.append(dict(
+            op="serve_merged_step", backend=backend, kind="decode",
+            what="merged_baseline", mode=mode,
+            shape=dict(batch=grid["slots"], tokens=1, d=d),
+            us_per_call=round(us_merged, 2)))
+        derived[f"bank_vs_merged_overhead_{backend}"] = round(
+            us_step / max(us_merged, 1e-9), 3)
+
+    covered = {(e["op"], e["backend"]) for e in entries}
+    missing = sorted({(op, be) for op in ROW_OPS
+                      for be in ("jnp", "pallas")} - covered)
+    if missing:
+        raise SystemExit(f"serve bench suite is missing entries for: "
+                         f"{missing}")
+    return dict(
+        suite="serve", shapes=shapes, platform=jax.default_backend(),
+        jax=jax.__version__, arch="smollm-360m/smoke",
+        grids={k: {kk: list(vv) if isinstance(vv, tuple) else vv
+                   for kk, vv in g.items()}
+               for k, g in SERVE_SHAPES.items()},
+        note=("pallas rows off-TPU are interpret-mode emulation at the "
+              "tiny grid; jnp rows are the CPU-comparable numbers; "
+              "serve_trace us_per_call = 1e6/throughput_tok_s"),
+        derived=derived,
+        entries=entries,
+    )
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run_suite(shapes="tiny"), indent=1))

@@ -104,6 +104,11 @@ def run_suite(shapes: str = "train", include_interp: bool = False,
     """Time value-and-grad + standalone backward for every op/backend.
 
     Raises SystemExit if any forward op lacks a backward entry."""
+    if shapes == "serving":
+        # cross-suite default grid name → this suite's own default: the
+        # full serving grid with backward passes takes minutes for no
+        # extra signal
+        shapes = "train"
     grid = _grid(shapes)
     on_tpu = jax.default_backend() == "tpu"
     fwd_ops = sorted({o for (o, _) in execute._REGISTRY

@@ -188,6 +188,47 @@ class AdapterBank:
             _insert(bank, mod, stacked)
         return cls(bank, len(trees), stack_ndims)
 
+    def with_capacity(self, capacity: int) -> "AdapterBank":
+        """Zero-pad the tenant axis to a fixed ``capacity``.
+
+        The serve engine's registry allocates a fixed-size device bank
+        once and thereafter only swaps rows (:meth:`replace_slot`), so
+        onboarding tenants never changes any leaf shape — the jitted
+        serving functions compile exactly once (DESIGN.md §9)."""
+        if capacity < self.tenants:
+            raise ValueError(f"capacity {capacity} < resident tenants "
+                             f"{self.tenants}")
+        if capacity == self.tenants:
+            return self
+        out: Params = {}
+        for mod, adapter in _flatten_adapter_modules(self.tree):
+            nd = self.stack_ndims[mod]
+            pad = capacity - self.tenants
+            _insert(out, mod, {
+                k: jnp.pad(v, [(0, pad) if a == nd else (0, 0)
+                               for a in range(v.ndim)])
+                for k, v in adapter.items()})
+        return AdapterBank(out, capacity, self.stack_ndims)
+
+    def replace_slot(self, slot, adapters: Params) -> "AdapterBank":
+        """Functional in-place slot swap: a NEW bank whose tenant row
+        ``slot`` holds ``adapters`` (a standard single-tenant tree);
+        every other row — and the original bank — is untouched.
+
+        ``slot`` may be a traced int32, so a jitted swap never retraces
+        as tenants churn: onboarding a brand-new tenant mid-traffic
+        writes one bank row instead of rebuilding the bank."""
+        out: Params = {}
+        for mod, adapter in _flatten_adapter_modules(self.tree):
+            nd = self.stack_ndims[mod]
+            new = _module(adapters, mod)
+            _insert(out, mod, {
+                k: jax.lax.dynamic_update_slice_in_dim(
+                    v, jnp.expand_dims(new[k], nd).astype(v.dtype),
+                    slot, axis=nd)
+                for k, v in adapter.items()})
+        return AdapterBank(out, self.tenants, self.stack_ndims)
+
     def select(self, tenant: int) -> Params:
         """Single tenant's standard adapter tree (e.g. for merge_params)."""
         out: Params = {}
@@ -205,7 +246,9 @@ class AdapterBank:
 
         ids must lie in [0, tenants): out-of-range ids follow jax gather
         semantics (clamp to the last tenant) rather than erroring —
-        request frontends must validate ids before this point."""
+        request frontends must call :func:`validate_tenant_ids` before
+        this point (this method may be traced, so it cannot raise on
+        data itself)."""
         ids = jnp.asarray(ids, jnp.int32)
         out: Params = {}
         for mod, adapter in _flatten_adapter_modules(self.tree):
@@ -245,6 +288,29 @@ def _module(tree: Params, path: str) -> Params:
     for k in path.split("/"):
         node = node[k]
     return node
+
+
+def validate_tenant_ids(ids, tenants: int) -> np.ndarray:
+    """Host-side guard for serving frontends: raise on any id outside
+    ``[0, tenants)`` instead of silently serving the last tenant's
+    adapter (jax gathers *clamp* out-of-range indices — a bad id would
+    otherwise leak tenant ``tenants - 1``'s weights to the caller).
+
+    Returns the ids as an int32 numpy array.  Must be called on
+    concrete (host) values — every serving frontend (``launch/serve``,
+    the serve engine's submit path, examples) validates here before ids
+    ever reach the traced :meth:`AdapterBank.request`."""
+    if isinstance(ids, jax.core.Tracer):
+        raise TypeError("validate_tenant_ids is a host-side frontend "
+                        "guard; it cannot check traced ids")
+    arr = np.asarray(ids)
+    if arr.size and not np.issubdtype(arr.dtype, np.integer):
+        raise TypeError(f"tenant ids must be integers, got {arr.dtype}")
+    bad = arr[(arr < 0) | (arr >= tenants)] if arr.size else arr
+    if bad.size:
+        raise ValueError(f"tenant id(s) {sorted(set(bad.tolist()))} out "
+                         f"of range [0, {tenants})")
+    return arr.astype(np.int32)
 
 
 def init_adapter_bank(rng: jax.Array, params: Params, cfg: PEFTConfig,

@@ -1,34 +1,38 @@
-"""Batched serving driver with multi-tenant ETHER adapters.
+"""Serving CLI — thin frontend over the continuous-batching engine.
+
+One-shot latency modes (static batch, fixed tenants):
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
         --variant smoke --batch 4 --prompt-len 32 --gen 16
 
-Serving modes:
 * ``--merged``: absorb adapters into the base weights (paper's
   zero-latency deployment, core.merge_params) and serve the plain model;
 * default: unmerged activation-side adapters — per-step reflections on
   the frozen weights;
-* ``--tenants N``: real multi-tenant serving (DESIGN.md §2). Builds an
-  N-tenant :class:`~repro.core.peft.AdapterBank`, assigns each request a
-  tenant id, and runs BOTH the unmerged-bank path (per-request batched
-  gather-and-reflect — one weight set, N tenants resident) and the
-  merged baseline (tenant 0 absorbed into the weights — zero-latency but
-  single-tenant), printing the decode-latency comparison.
+* ``--tenants N``: static multi-tenant comparison (DESIGN.md §2): an
+  N-tenant :class:`~repro.core.peft.AdapterBank` serving the batch
+  unmerged vs the tenant-0 merged baseline.
 
-``--method`` is threaded through prefill/decode for every mode. Banks
-serve both transform variants:
+Greedy sampling runs INSIDE the jitted prefill/step functions, so the
+reported ms/token is device work — host bookkeeping (output collection)
+stays out of the timed loop.
 
-* ``--method ether`` (rank-1): the fused ``householder_gemm_batched``
-  kernel gathers each request's hyperplanes and reflects inside the
-  GEMM k-loop.
-* ``--method etherplus`` (rank-2, the paper's best-performing variant):
-  ``etherplus_reflect_batched`` applies each tenant's H⁺ on the input
-  side and — for two-sided adapters — its H̃⁺ on the output features,
-  with u1/v1/u2/v2 all stacked on the bank's tenant axis.
+Continuous-batching replay (the real serving subsystem, DESIGN.md §9):
 
-``--backend {jnp,pallas,auto}`` selects the execution backend for the
-ETHER hot ops (core.execute); ``auto`` uses the Pallas kernels whenever
-the shapes tile and is the serving default.
+    PYTHONPATH=src python -m repro.launch.serve --trace --tenants 64 \
+        --backend auto
+
+``--trace`` replays a synthetic Poisson/Zipf workload through
+``repro.serving``: ``--tenants`` is the device bank *capacity*; the
+tenant universe (``--distinct-tenants``, default 4×capacity) exceeds it,
+so cold tenants are onboarded (functional bank-row swaps) and LRU
+tenants evicted mid-traffic.  Requests are admitted into free decode
+slots and retired as they finish — with zero recompiles after warmup,
+asserted via the engine's jit-cache-miss counter.  Reports throughput,
+p50/p95 per-token latency, time-to-first-token, and registry churn.
+
+``--method`` / ``--backend {jnp,pallas,auto}`` select the ETHER variant
+and execution backend (core.execute) in every mode.
 """
 
 from __future__ import annotations
@@ -37,7 +41,40 @@ import argparse
 import time
 
 
-def _timed_generation(prefill_fn, step_fn, params, adapters, batch, gen,
+def make_serving_fns(cfg, peft_cfg, gen: int):
+    """Jitted (prefill, step) with greedy sampling fused inside: the
+    step returns the next token, not logits, so timing the step times
+    device work only (argmax/bookkeeping included in the jit).
+
+    The prefill grows the cache to prompt + ``gen`` + 1 positions
+    (``pad_cache``) so decode writes land past the prompt instead of
+    clamping onto its last position — the pre-engine driver skipped
+    this and silently clobbered the final prompt token's KV."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import decode_step, prefill
+    from repro.models.api import pad_cache
+
+    @jax.jit
+    def pf(params, adapters, batch, ids):
+        cache, logits = prefill(params, adapters, batch, cfg, peft_cfg,
+                                tenant_ids=ids)
+        cache = pad_cache(cache, cfg,
+                          batch["tokens"].shape[1] + gen + 1)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return cache, tok
+
+    @jax.jit
+    def st(params, adapters, cache, tok, ids):
+        logits, new_cache = decode_step(params, adapters, cache, tok, cfg,
+                                        peft_cfg, tenant_ids=ids)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, new_cache
+
+    return pf, st
+
+
+def _timed_generation(pf, st, params, adapters, batch, gen,
                       tenant_ids=None):
     """Run prefill + ``gen`` greedy decode steps; returns
     (t_prefill_s, t_per_token_s, generated (B, gen+1)).
@@ -47,26 +84,88 @@ def _timed_generation(prefill_fn, step_fn, params, adapters, batch, gen,
     import jax
     import jax.numpy as jnp
 
-    cache, logits = prefill_fn(params, adapters, batch, tenant_ids)
-    wtok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    _, c2 = step_fn(params, adapters, cache, wtok, tenant_ids)
-    jax.tree_util.tree_leaves(c2)[0].block_until_ready()
+    cache, tok = pf(params, adapters, batch, tenant_ids)
+    t2, _ = st(params, adapters, cache, tok, tenant_ids)
+    jax.block_until_ready(t2)
 
     t0 = time.perf_counter()
-    cache, logits = prefill_fn(params, adapters, batch, tenant_ids)
-    logits.block_until_ready()
+    cache, tok = pf(params, adapters, batch, tenant_ids)
+    tok.block_until_ready()
     t_prefill = time.perf_counter() - t0
 
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     out_tokens = [tok]
     t0 = time.perf_counter()
     for _ in range(gen):
-        logits, cache = step_fn(params, adapters, cache, tok, tenant_ids)
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        tok, cache = st(params, adapters, cache, tok, tenant_ids)
         out_tokens.append(tok)
     tok.block_until_ready()
     t_gen = time.perf_counter() - t0
-    return t_prefill, t_gen / gen, jnp.concatenate(out_tokens, axis=1)
+    return (t_prefill, t_gen / max(gen, 1),
+            jnp.concatenate(out_tokens, axis=1))
+
+
+def run_trace(args, cfg, peft, params, rng):
+    """Continuous-batching replay over the serve engine."""
+    import jax
+    from repro.core.peft import validate_tenant_ids
+    from repro.serving import (AdapterRegistry, Scheduler, ServeEngine,
+                               summarize, synthetic_workload)
+
+    capacity = args.tenants if args.tenants > 0 else 8
+    distinct = args.distinct_tenants or 4 * capacity
+    n_req = args.requests or 3 * capacity
+    buckets = tuple(int(b) for b in args.prompt_buckets.split(","))
+
+    registry = AdapterRegistry(params, peft, capacity, n_tenants=distinct,
+                               rng=jax.random.fold_in(rng, 1))
+    engine = ServeEngine(cfg, params, registry, peft, slots=args.slots,
+                         prompt_buckets=buckets,
+                         max_new_tokens=args.gen)
+    kb = registry.bank.size_bytes() / 1e3
+    print(f"serve engine [{args.method}/{args.backend}]: {args.slots} "
+          f"slots, bank capacity {capacity} tenants = {kb:.1f} KB HBM, "
+          f"universe {distinct} tenants, buckets {buckets}, "
+          f"max_len {engine.max_len}")
+
+    t0 = time.perf_counter()
+    snap = engine.warmup()
+    print(f"warmup (all compiles): {time.perf_counter() - t0:.1f} s  "
+          f"traces: {snap}")
+
+    workload = synthetic_workload(
+        n_req, distinct, vocab=cfg.vocab,
+        rate_rps=args.rate if args.rate > 0 else None,
+        zipf_a=args.zipf_a, prompt_lens=(4, buckets[-1]),
+        gen_lens=(2, args.gen), seed=args.seed)
+    # frontend guard: a bad tenant id must raise, never clamp-serve
+    # another tenant's adapter
+    validate_tenant_ids([r.tenant_id for r in workload], distinct)
+    n_distinct = len({r.tenant_id for r in workload})
+    print(f"replaying {n_req} requests over {n_distinct} distinct "
+          f"tenants (Poisson rate "
+          f"{args.rate if args.rate > 0 else 'inf'}/s, "
+          f"Zipf a={args.zipf_a})")
+
+    done = Scheduler(engine).run(workload)
+    engine.assert_no_retrace(snap)
+    if n_distinct > capacity and not registry.stats["evictions"]:
+        raise AssertionError("distinct tenants exceeded bank capacity "
+                             "but nothing was evicted")
+
+    s = summarize(done)
+    r = registry.stats
+    print(f"completed {s['n_requests']} requests, "
+          f"{s['generated_tokens']} tokens in {s['span_s']:.2f} s")
+    print(f"throughput: {s['throughput_tok_s']:.1f} tok/s   "
+          f"per-token latency p50 {s['p50_ms_per_token']:.2f} ms / "
+          f"p95 {s['p95_ms_per_token']:.2f} ms   "
+          f"ttft p50 {s['ttft_p50_ms']:.1f} ms / "
+          f"p95 {s['ttft_p95_ms']:.1f} ms")
+    print(f"registry churn: {r['hits']} hits, {r['misses']} onboards "
+          f"({r['evictions']} evictions), "
+          f"{r['swap_s'] / max(r['swaps'], 1) * 1e3:.2f} ms/swap")
+    print(f"jit cache misses after warmup: 0 "
+          f"(counters: {engine.jit_cache_misses()})")
 
 
 def main():
@@ -80,12 +179,31 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--merged", action="store_true")
     ap.add_argument("--tenants", type=int, default=0,
-                    help="N>0: multi-tenant AdapterBank serving; compares "
-                         "merged vs unmerged-bank decode latency")
+                    help="one-shot mode: N>0 compares merged vs "
+                         "unmerged-bank decode; --trace mode: device "
+                         "bank capacity (default 8)")
     ap.add_argument("--backend", default="auto",
                     choices=("jnp", "pallas", "auto"),
                     help="execution backend for the ETHER hot ops")
     ap.add_argument("--seed", type=int, default=0)
+    # continuous-batching replay
+    ap.add_argument("--trace", action="store_true",
+                    help="replay a synthetic Poisson/Zipf workload "
+                         "through the continuous-batching engine")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="decode slots (engine batch width)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="trace requests (default 3x capacity)")
+    ap.add_argument("--distinct-tenants", type=int, default=0,
+                    help="tenant universe (default 4x capacity — "
+                         "exceeds the bank so eviction is exercised)")
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="Poisson arrival rate, requests/s (0 = all "
+                         "arrive at t=0)")
+    ap.add_argument("--zipf-a", type=float, default=0.8,
+                    help="Zipf exponent of the tenant popularity")
+    ap.add_argument("--prompt-buckets", default="16,32",
+                    help="comma-separated prompt pad buckets")
     args = ap.parse_args()
 
     import jax
@@ -93,10 +211,9 @@ def main():
     from repro.configs import get_config, peft_targets
     from repro.core import execute
     from repro.core.peft import (init_adapter_bank, init_adapters,
-                                 merge_params)
+                                 merge_params, validate_tenant_ids)
     from repro.core.transforms import PEFTConfig
-    from repro.models import (EncDecConfig, decode_step, init_model,
-                              prefill)
+    from repro.models import EncDecConfig, init_model
 
     cfg = get_config(args.arch, args.variant)
     peft = PEFTConfig(method=args.method, n_blocks=args.n_blocks,
@@ -104,6 +221,10 @@ def main():
                       backend=args.backend)
     rng = jax.random.PRNGKey(args.seed)
     params = init_model(rng, cfg)
+
+    if args.trace:
+        run_trace(args, cfg, peft, params, rng)
+        return
 
     B, P = args.batch, args.prompt_len
     batch = {"tokens": jax.random.randint(
@@ -116,14 +237,6 @@ def main():
         batch["image_embeds"] = jax.random.normal(
             jax.random.fold_in(rng, 3), (B, cfg.n_img_tokens,
                                          cfg.d_frontend), cfg.cdt())
-
-    def make_fns(peft_cfg):
-        pf = jax.jit(lambda p, a, b, i: prefill(p, a, b, cfg, peft_cfg,
-                                                tenant_ids=i))
-        st = jax.jit(lambda p, a, c, t, i: decode_step(p, a, c, t, cfg,
-                                                       peft_cfg,
-                                                       tenant_ids=i))
-        return pf, st
 
     if args.tenants > 0:
         from repro.core.peft import AdapterBank
@@ -142,11 +255,12 @@ def main():
               f"{kb:.1f} KB HBM ({kb / args.tenants:.2f} KB/tenant)")
         ids = jax.random.randint(jax.random.fold_in(rng, 4), (B,), 0,
                                  args.tenants, jnp.int32)
+        ids = jnp.asarray(validate_tenant_ids(ids, args.tenants))
         print(f"request tenant ids: {ids.tolist()}")
 
         # --- unmerged bank: one weight set serves all tenants ---
         execute.reset_counters()
-        pf, st = make_fns(peft)
+        pf, st = make_serving_fns(cfg, peft, args.gen)
         t_pre_u, t_tok_u, gen_u = _timed_generation(
             pf, st, params, bank, batch, args.gen, tenant_ids=ids)
         live = {k: v for k, v in execute.counters().items() if v}
@@ -157,7 +271,7 @@ def main():
         # --- merged baseline: tenant 0 absorbed, zero per-step cost,
         #     but the weights can serve only that tenant ---
         merged = merge_params(params, bank.select(0), peft)
-        pf_m, st_m = make_fns(None)
+        pf_m, st_m = make_serving_fns(cfg, None, args.gen)
         t_pre_m, t_tok_m, _ = _timed_generation(
             pf_m, st_m, merged, None, batch, args.gen)
         print(f"[merged t=0]     prefill: {t_pre_m*1e3:.1f} ms  "
@@ -174,7 +288,7 @@ def main():
         adapters, peft = None, None
 
     execute.reset_counters()
-    pf, st = make_fns(peft)
+    pf, st = make_serving_fns(cfg, peft, args.gen)
     t_prefill, t_tok, gen = _timed_generation(pf, st, params, adapters,
                                               batch, args.gen)
     live = {k: v for k, v in execute.counters().items() if v}

@@ -96,15 +96,24 @@ def _resolve_adapters(adapters, tenant_ids):
 
 
 def prefill(params: Params, adapters: Optional[Params], batch: dict, cfg,
-            peft: Optional[PEFTConfig], tenant_ids=None):
+            peft: Optional[PEFTConfig], tenant_ids=None, true_lens=None):
     """Build serving caches from a full prompt; returns (cache,
     last-position logits) — the serve_prefill entry the dry-run lowers.
 
     ``tenant_ids`` (B,) selects each request's adapter from an
     AdapterBank passed as ``adapters`` (multi-tenant serving; rank-1
-    ETHER and rank-2 ETHER+ banks, DESIGN.md §2)."""
+    ETHER and rank-2 ETHER+ banks, DESIGN.md §2).
+
+    ``true_lens`` (B,) supports right-padded prompts (the serve engine's
+    fixed pad buckets): the returned logits are gathered at each row's
+    last *real* token, position ``true_lens[b] - 1``, instead of the
+    padded last column.  Causal masking keeps positions < true_lens
+    unaffected by the pads; the engine overwrites pad-position KV before
+    any decode step can attend to it (DESIGN.md §9)."""
     adapters = _resolve_adapters(adapters, tenant_ids)
     if isinstance(cfg, EncDecConfig):
+        if true_lens is not None:
+            raise NotImplementedError("true_lens prefill is decoder-only")
         enc_out = encdec.encode(params, cfg, batch["frame_embeds"],
                                 adapters=adapters, peft=peft)
         hidden, cache = encdec.decode(params, cfg, batch["tokens"],
@@ -116,6 +125,15 @@ def prefill(params: Params, adapters: Optional[Params], batch: dict, cfg,
     hidden, cache, _ = backbone.forward(
         params, cfg, tokens=batch["tokens"], adapters=adapters, peft=peft,
         mode="prefill", image_embeds=batch.get("image_embeds"))
+    if true_lens is not None:
+        if cfg.frontend == "vision" and batch.get("image_embeds") is not None:
+            raise NotImplementedError("true_lens prefill does not support "
+                                      "prepended frontend tokens")
+        idx = jnp.asarray(true_lens, jnp.int32) - 1        # (B,)
+        last = jnp.take_along_axis(
+            hidden, idx[:, None, None].astype(jnp.int32)
+            .repeat(hidden.shape[-1], axis=-1), axis=1)    # (B, 1, d)
+        return cache, backbone.logits_fn(params, cfg, last)
     logits = backbone.logits_fn(params, cfg, hidden[:, -1:])
     return cache, logits
 

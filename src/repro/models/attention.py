@@ -157,10 +157,23 @@ def apply_attention(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
         t_cache = cache["k"].shape[2]
         ring = window is not None and t_cache == window
         write_pos = cache_pos % t_cache if ring else cache_pos
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
-            cache["k"].dtype), write_pos, axis=2)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
-            cache["v"].dtype), write_pos, axis=2)
+        if jnp.ndim(cache_pos) == 1:
+            # Per-slot cursors (continuous batching): row b writes its
+            # token at its own time index write_pos[b].  Advanced-index
+            # scatter; decode is single-token per step by construction.
+            if k.shape[2] != 1:
+                raise ValueError("per-slot cache_pos requires "
+                                 "single-token decode steps")
+            bidx = jnp.arange(k.shape[0])
+            ck = cache["k"].at[bidx, :, write_pos, :].set(
+                k[:, :, 0, :].astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, :, write_pos, :].set(
+                v[:, :, 0, :].astype(cache["v"].dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+                cache["k"].dtype), write_pos, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+                cache["v"].dtype), write_pos, axis=2)
         qpos = positions[:, -1:]                     # (B, 1) absolute pos
         kpos = None
         if ring:

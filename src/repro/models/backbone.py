@@ -306,7 +306,15 @@ def forward(params: Params, cfg: ModelConfig, *, tokens=None,
     if mode == "decode":
         assert cache is not None
         pos0 = cache["cursor"]
-        positions = jnp.broadcast_to(pos0[None, None], (B, S)).astype(jnp.int32)
+        if pos0.ndim == 1:
+            # Per-slot cursors (continuous-batching serve engine): each
+            # batch row decodes at its own absolute position and the KV
+            # write scatters per row (see apply_attention).
+            positions = (pos0[:, None]
+                         + jnp.arange(S)[None]).astype(jnp.int32)
+        else:
+            positions = jnp.broadcast_to(pos0[None, None],
+                                         (B, S)).astype(jnp.int32)
         cache_pos = pos0
     else:
         positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))

@@ -1,0 +1,16 @@
+"""Continuous-batching multi-tenant serving subsystem (DESIGN.md §9).
+
+``registry``  — host tenant store + fixed-capacity device AdapterBank
+``engine``    — jit-stable slotted decode engine (prefill-into-slot,
+                fused batched decode step, retrace counters)
+``scheduler`` — FCFS admission, slot allocation, Poisson/Zipf workloads
+"""
+
+from repro.serving.engine import ServeEngine
+from repro.serving.registry import AdapterRegistry
+from repro.serving.scheduler import (FCFSQueue, Request, Scheduler,
+                                     SlotAllocator, summarize,
+                                     synthetic_workload)
+
+__all__ = ["ServeEngine", "AdapterRegistry", "FCFSQueue", "Request",
+           "Scheduler", "SlotAllocator", "summarize", "synthetic_workload"]

@@ -1,0 +1,350 @@
+"""Continuous-batching serve engine over fixed decode slots.
+
+The engine owns all device state for multi-tenant serving (DESIGN.md
+§9): a preallocated KV cache with one row per decode *slot*, a per-slot
+cursor vector (each slot decodes at its own absolute position), per-slot
+tenant-slot ids into the registry's fixed-capacity
+:class:`~repro.core.peft.AdapterBank`, and per-slot stop/length
+bookkeeping — all of it carried in a single pytree of FIXED shapes.
+
+Exactly two jitted entry points touch the device:
+
+* ``prefill_into_slot`` (one compile per prompt pad bucket): run the
+  padded prompt at batch 1, gather the last *real* token's logits
+  (``true_lens`` prefill), scatter the padded KV into the slot's cache
+  row, seed cursor/active/remaining/tenant for the slot, and sample the
+  first token — all inside the jit.
+* ``decode_step`` (one compile, ever): one fused batched greedy-decode
+  step over ALL slots — adapter gather-and-reflect (the PR 2/3 batched
+  kernels, untouched underneath), attention against per-slot cursors,
+  argmax sampling, cursor/remaining/active updates.  Sampling lives
+  inside the jit so measured step time is device work.
+
+Admission and retirement are therefore pure data: a new request writes
+one cache row + four slot scalars (traced indices — no shape changes),
+and retirement is host bookkeeping only.  Nothing retraces mid-flight;
+every jitted function counts its traces (the python body runs only when
+jax actually retraces), and :meth:`jit_cache_misses` exposes the counter
+that ``--trace`` replays assert against after warmup.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.peft import validate_tenant_ids
+from repro.models import api
+from repro.models.backbone import ModelConfig
+from repro.models.encdec import EncDecConfig
+from repro.serving.registry import AdapterRegistry
+from repro.serving.scheduler import Request, SlotAllocator
+
+Params = dict[str, Any]
+
+DEFAULT_BUCKETS = (16, 32)
+
+
+def _check_servable(cfg, max_len: int) -> None:
+    """The slot engine needs right-padded prefill + per-slot cursors to
+    be exact; that holds for attention blocks (causal masking hides pad
+    KV until it is overwritten) but not for recurrent state."""
+    if isinstance(cfg, EncDecConfig):
+        raise NotImplementedError("serve engine is decoder-only")
+    if getattr(cfg, "frontend", None) == "vision":
+        raise NotImplementedError("serve engine does not support "
+                                  "prepended frontend tokens")
+    pattern = tuple(cfg.block_pattern) + tuple(cfg.remainder)
+    bad = [b for b in pattern if b not in ("attn", "local_attn")]
+    if bad:
+        raise NotImplementedError(
+            f"recurrent-state blocks {sorted(set(bad))} cannot absorb "
+            f"right-padded prefill (pad tokens corrupt the running "
+            f"state); the slot engine serves attention-only models")
+    if ("local_attn" in pattern and cfg.window is not None
+            and max_len > cfg.window):
+        raise NotImplementedError(
+            f"max_len {max_len} > window {cfg.window}: ring-buffer wrap "
+            f"would expose stale pad KV to per-slot cursors")
+
+
+class ServeEngine:
+    """Fixed-slot continuous batching over a tenant adapter registry."""
+
+    def __init__(self, cfg: ModelConfig, params: Params,
+                 registry: AdapterRegistry, peft, *, slots: int = 8,
+                 prompt_buckets=DEFAULT_BUCKETS, max_new_tokens: int = 32,
+                 max_len: Optional[int] = None):
+        self.cfg, self.params, self.registry, self.peft = (cfg, params,
+                                                           registry, peft)
+        self.slots = int(slots)
+        self.prompt_buckets = tuple(sorted({int(b) for b in prompt_buckets}))
+        if not self.prompt_buckets or self.prompt_buckets[0] < 1:
+            raise ValueError("need at least one positive prompt bucket")
+        self.max_new_tokens = int(max_new_tokens)
+        self.max_len = int(max_len or
+                           (self.prompt_buckets[-1] + self.max_new_tokens))
+        if self.prompt_buckets[-1] + self.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"max_len {self.max_len} cannot hold a full bucket "
+                f"({self.prompt_buckets[-1]}) + {self.max_new_tokens} "
+                f"generated tokens")
+        _check_servable(cfg, self.max_len)
+
+        self._alloc = SlotAllocator(self.slots)
+        self._requests: dict[int, Request] = {}
+        self._traces: dict[str, int] = {}
+        self._origin = time.perf_counter()
+        self._state = self._fresh_state()
+        self._step_fn = self._jit("decode_step", self._step_impl)
+        self._prefill_fns = {
+            b: self._jit(f"prefill_p{b}", self._make_prefill(b))
+            for b in self.prompt_buckets}
+
+    # -- jit bookkeeping ----------------------------------------------
+
+    def _jit(self, name: str, fn):
+        """jit with a cache-miss counter: the wrapped python body runs
+        only when jax (re)traces, so the count IS the compile count."""
+        def counted(*args):
+            self._traces[name] = self._traces.get(name, 0) + 1
+            return fn(*args)
+        return jax.jit(counted)
+
+    def jit_cache_misses(self, include_registry: bool = True
+                         ) -> dict[str, int]:
+        out = dict(self._traces)
+        if include_registry:
+            out["registry_swap"] = self.registry.stats.get("swap_traces", 0)
+            out["registry_init"] = self.registry.stats.get("init_traces", 0)
+        return out
+
+    def _now(self) -> float:
+        return time.perf_counter() - self._origin
+
+    def start_clock(self, origin: float) -> None:
+        """Align request timestamps with the scheduler's replay clock."""
+        self._origin = origin
+
+    # -- device state -------------------------------------------------
+
+    def _fresh_state(self) -> Params:
+        cache = api.init_cache(self.cfg, self.slots, self.max_len)
+        cache["cursor"] = jnp.zeros((self.slots,), jnp.int32)
+        return dict(
+            cache=cache,
+            tok=jnp.zeros((self.slots, 1), jnp.int32),
+            tenant=jnp.zeros((self.slots,), jnp.int32),
+            active=jnp.zeros((self.slots,), bool),
+            remaining=jnp.zeros((self.slots,), jnp.int32),
+        )
+
+    def _step_impl(self, params, bank, state):
+        """One fused batched decode step over all slots (argmax sampling
+        inside the jit — ms/token measures device work only)."""
+        cache = state["cache"]
+        logits, new_cache = api.decode_step(
+            params, bank, cache, state["tok"], self.cfg, self.peft,
+            tenant_ids=state["tenant"])
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        active = state["active"]
+        # inactive slots keep their cursor (their garbage write lands on
+        # the same in-bounds position every step and is fully overwritten
+        # by the next prefill-into-slot)
+        new_cache["cursor"] = jnp.where(active, new_cache["cursor"],
+                                        cache["cursor"])
+        remaining = jnp.where(active, state["remaining"] - 1,
+                              state["remaining"])
+        return dict(
+            cache=new_cache,
+            tok=jnp.where(active, nxt, state["tok"][:, 0])[:, None],
+            tenant=state["tenant"],
+            active=active & (remaining > 0),
+            remaining=remaining,
+        ), nxt
+
+    def _make_prefill(self, bucket: int):
+        def impl(params, bank, state, tokens, true_len, slot, tslot,
+                 max_new):
+            true_len = jnp.asarray(true_len, jnp.int32)
+            slot = jnp.asarray(slot, jnp.int32)
+            tslot = jnp.asarray(tslot, jnp.int32)
+            max_new = jnp.asarray(max_new, jnp.int32)
+            cache1, logits = api.prefill(
+                params, bank, {"tokens": tokens}, self.cfg, self.peft,
+                tenant_ids=tslot[None], true_lens=true_len[None])
+            cache1 = api.pad_cache(cache1, self.cfg, self.max_len)
+            tok = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+            cache = state["cache"]
+            new_cache: Params = {"cursor": cache["cursor"].at[slot]
+                                 .set(true_len)}
+            for key, sub in cache.items():
+                if key == "cursor":
+                    continue
+                ax = 1 if key.startswith("pos") else 0
+                new_cache[key] = jax.tree_util.tree_map(
+                    lambda big, small, _ax=ax: _write_row(big, small,
+                                                          slot, _ax),
+                    sub, cache1[key])
+            remaining = state["remaining"].at[slot].set(max_new - 1)
+            return dict(
+                cache=new_cache,
+                tok=state["tok"].at[slot, 0].set(tok),
+                tenant=state["tenant"].at[slot].set(tslot),
+                active=state["active"].at[slot].set(max_new > 1),
+                remaining=remaining,
+            ), tok
+        return impl
+
+    # -- serving API --------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return self._alloc.n_free
+
+    @property
+    def n_active(self) -> int:
+        return len(self._requests)
+
+    def can_admit(self, req: Request) -> bool:
+        """True iff :meth:`admit` would succeed right now: a decode slot
+        is free AND the tenant's bank slot is acquirable (resident, or
+        free/evictable).  With more decode slots than bank capacity,
+        distinct-tenant requests beyond capacity must wait — the
+        scheduler checks here and applies back-pressure instead of
+        letting ``registry.acquire`` raise mid-replay."""
+        return (self._alloc.n_free > 0
+                and self.registry.can_acquire(req.tenant_id))
+
+    def bucket_for(self, prompt_len: int) -> int:
+        for b in self.prompt_buckets:
+            if prompt_len <= b:
+                return b
+        raise ValueError(f"prompt length {prompt_len} exceeds the "
+                         f"largest pad bucket {self.prompt_buckets[-1]}")
+
+    def admit(self, req: Request) -> list[Request]:
+        """Prefill ``req`` into a free slot (acquiring its tenant's bank
+        slot from the registry) and emit its first token.  Returns the
+        request in a list iff it finished immediately (1-token gen)."""
+        plen = int(len(req.prompt))
+        if plen < 1:
+            raise ValueError("empty prompt")
+        if int(req.max_new_tokens) < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if plen + int(req.max_new_tokens) - 1 > self.max_len:
+            # the last decode write would land past the slot's cache row
+            # and be silently dropped (jax out-of-bounds scatter), so
+            # every later token would read a cache missing recent KV
+            raise ValueError(
+                f"prompt ({plen}) + max_new_tokens "
+                f"({req.max_new_tokens}) - 1 exceeds the engine's "
+                f"max_len {self.max_len}")
+        bucket = self.bucket_for(plen)
+        slot = self._alloc.alloc()
+        if slot is None:
+            raise RuntimeError("no free decode slot (check n_free first)")
+        try:
+            tslot = self.registry.acquire(req.tenant_id)   # validates id
+        except Exception:
+            self._alloc.free(slot)                     # don't leak it
+            raise
+        # frontend guard on the *slot* indirection as well — a registry
+        # bug must raise here, not clamp inside the bank gather
+        validate_tenant_ids([tslot], self.registry.capacity)
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :plen] = np.asarray(req.prompt, np.int32)
+        t0 = self._now()
+        state, tok = self._prefill_fns[bucket](
+            self.params, self.registry.bank, self._state, tokens,
+            int(plen), int(slot), int(tslot), int(req.max_new_tokens))
+        first = int(tok)                               # device sync
+        self._state = state
+        req.slot = slot
+        req.admit_s = t0
+        req.first_token_s = self._now()
+        req.tokens.append(first)
+        self._requests[slot] = req
+        if req.done:
+            return [self._retire(slot)]
+        return []
+
+    def step(self) -> list[Request]:
+        """One batched decode step; returns requests that finished."""
+        if not self._requests:
+            return []
+        t0 = time.perf_counter()
+        state, nxt = self._step_fn(self.params, self.registry.bank,
+                                   self._state)
+        toks = np.asarray(nxt)                         # device sync
+        dt = time.perf_counter() - t0
+        self._state = state
+        finished = []
+        for slot, req in list(self._requests.items()):
+            req.tokens.append(int(toks[slot]))
+            req.step_s.append(dt)
+            if req.done:
+                finished.append(self._retire(slot))
+        return finished
+
+    def _retire(self, slot: int) -> Request:
+        """Pure host bookkeeping: free the slot, unpin the tenant.  No
+        device work — the slot's mask bit is already False and the next
+        admission overwrites the row wholesale."""
+        req = self._requests.pop(slot)
+        self._alloc.free(slot)
+        self.registry.release(req.tenant_id)
+        req.finish_s = self._now()
+        return req
+
+    def warmup(self) -> dict[str, int]:
+        """Compile every jitted entry point (all pad buckets, the decode
+        step, the registry's row swap + synthetic-adapter init) on
+        throwaway state, then reset.  Returns the trace-counter snapshot
+        that traffic is asserted against."""
+        scratch = self._state
+        for b in self.prompt_buckets:
+            tokens = np.zeros((1, b), np.int32)
+            state, _ = self._prefill_fns[b](
+                self.params, self.registry.bank, scratch, tokens,
+                int(1), int(0), int(0), int(2))
+        state, _ = self._step_fn(self.params, self.registry.bank, state)
+        jax.block_until_ready(state["tok"])
+        tree = self.registry.adapters_for(0)           # warms init_fn
+        discarded = self.registry._swap(self.registry.bank, tree,
+                                        jnp.int32(0))
+        jax.block_until_ready(jax.tree_util.tree_leaves(discarded.tree)[0])
+        self._state = self._fresh_state()
+        return self.jit_cache_misses()
+
+    def assert_no_retrace(self, snapshot: dict[str, int]) -> None:
+        """Raise if any jitted serving function retraced since
+        ``snapshot`` (taken at :meth:`warmup`)."""
+        fresh = self.jit_cache_misses()
+        grew = {k: (snapshot.get(k, 0), v) for k, v in fresh.items()
+                if v > snapshot.get(k, 0)}
+        if grew:
+            raise AssertionError(
+                f"jit cache misses after warmup — serving retraced "
+                f"mid-flight: {grew}")
+
+
+def _write_row(big, small, slot, batch_axis):
+    """Scatter one prefilled request's cache leaf (batch size 1) into
+    row ``slot`` of the engine's slotted cache leaf."""
+    t_ax = big.ndim - 2                       # k/v time axis
+    if small.shape[t_ax] > big.shape[t_ax]:
+        # pad_cache lays window layers out as `window` ring slots; the
+        # engine guarantees max_len <= window (no wrap), so the leading
+        # max_len slots are exactly the live ones
+        small = jax.lax.slice_in_dim(small, 0, big.shape[t_ax], axis=t_ax)
+    if small.shape[:batch_axis] + small.shape[batch_axis + 1:] != \
+            big.shape[:batch_axis] + big.shape[batch_axis + 1:]:
+        raise ValueError(f"cache leaf mismatch: {small.shape} vs "
+                         f"{big.shape} (batch axis {batch_axis})")
+    return jax.lax.dynamic_update_slice_in_dim(
+        big, small.astype(big.dtype), slot, axis=batch_axis)

@@ -1,0 +1,192 @@
+"""Tenant adapter registry: host-side store + fixed-capacity device bank.
+
+The multi-tenant premise (DESIGN.md §2) is that ETHER adapters are O(d)
+per linear, so a *device-resident* :class:`~repro.core.peft.AdapterBank`
+holding ``capacity`` tenants costs a few KB each — but the tenant
+*universe* can be far larger than the bank.  The registry provides the
+indirection that makes that work without ever recompiling the serving
+functions:
+
+* a host-side store of per-tenant adapter trees (``put`` real finetuned
+  adapters, or let ``init_fn`` materialize synthetic ones on demand);
+* a fixed-capacity device bank whose leaf shapes NEVER change: tenants
+  are onboarded by :meth:`AdapterBank.replace_slot` — a jitted
+  functional row swap compiled exactly once;
+* tenant→slot mapping with free-list allocation and LRU eviction;
+  slots serving in-flight requests are pinned and never evicted.
+
+Unmapped (zero) bank rows are identity adapters — ETHER's ``u = 0``
+normalizes to a zero hyperplane, so even a stray gather of a free slot
+serves the *base* model rather than another tenant's weights.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.peft import (AdapterBank, init_adapter_bank, init_adapters,
+                             validate_tenant_ids)
+from repro.core.transforms import PEFTConfig
+
+Params = dict[str, Any]
+
+
+class AdapterRegistry:
+    """Fixed-capacity device adapter bank with tenant→slot indirection."""
+
+    def __init__(self, params: Params, peft: PEFTConfig, capacity: int, *,
+                 n_tenants: Optional[int] = None,
+                 rng: Optional[jax.Array] = None,
+                 init_fn: Optional[Callable[[int], Params]] = None):
+        if peft.method not in AdapterBank.BANK_METHODS:
+            raise ValueError(f"registry serves {AdapterBank.BANK_METHODS} "
+                             f"banks only (got {peft.method!r})")
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.n_tenants = n_tenants          # universe size; None = open
+        self._rng = rng if rng is not None else jax.random.PRNGKey(0)
+        seed = init_adapter_bank(self._rng, params, peft, 1)
+        zeroed = jax.tree_util.tree_map(jnp.zeros_like, seed.tree)
+        self.bank = AdapterBank(zeroed, 1,
+                                seed.stack_ndims).with_capacity(capacity)
+        self._store: dict[int, Params] = {}
+        self._init_fn = init_fn or self._default_init(params, peft)
+        self._slot_of: dict[int, int] = {}
+        self._tenant_of: dict[int, int] = {}
+        self._lru: OrderedDict[int, None] = OrderedDict()
+        self._free = list(range(capacity))
+        self._pins: dict[int, int] = {}
+        self.stats = dict(hits=0, misses=0, evictions=0, swaps=0,
+                          swap_s=0.0, swap_traces=0, init_traces=0)
+
+        def _swap_impl(bank, tree, slot):
+            # traced body: runs only on a jit cache miss, so this count
+            # is the compile count (see ServeEngine.jit_cache_misses)
+            self.stats["swap_traces"] += 1
+            return bank.replace_slot(slot, tree)
+
+        self._swap = jax.jit(_swap_impl)
+
+    def _default_init(self, params, peft):
+        """Deterministic per-tenant synthetic adapters: one jitted init
+        reused for every tenant id (no per-tenant recompiles)."""
+        base = jax.random.fold_in(self._rng, 0x5eed)
+
+        def _init_impl(tid):
+            self.stats["init_traces"] += 1
+            return init_adapters(jax.random.fold_in(base, tid),
+                                 params, peft)
+
+        fn = jax.jit(_init_impl)
+        return lambda tid: fn(jnp.int32(tid))
+
+    # -- host-side tenant store --------------------------------------
+
+    def put(self, tenant_id: int, adapters: Params) -> None:
+        """Register (or update) a tenant's adapter tree.  If the tenant
+        is currently resident its bank row is refreshed in place."""
+        self.validate(tenant_id)
+        self._store[int(tenant_id)] = adapters
+        slot = self._slot_of.get(int(tenant_id))
+        if slot is not None:
+            self._swap_in(slot, adapters)
+
+    def adapters_for(self, tenant_id: int) -> Params:
+        tid = int(tenant_id)
+        if tid not in self._store:
+            self._store[tid] = self._init_fn(tid)
+        return self._store[tid]
+
+    # -- slot lifecycle ----------------------------------------------
+
+    def validate(self, tenant_id) -> None:
+        """Frontend guard: ids must be integers in the tenant universe
+        (see :func:`repro.core.peft.validate_tenant_ids` for why a bad
+        id must raise here instead of clamping inside a gather)."""
+        bound = self.n_tenants if self.n_tenants is not None else (
+            int(tenant_id) + 1 if np.ndim(tenant_id) == 0
+            else int(np.max(np.asarray(tenant_id))) + 1)
+        validate_tenant_ids(tenant_id, bound)
+
+    def can_acquire(self, tenant_id: int) -> bool:
+        """True iff :meth:`acquire` would succeed right now — the
+        tenant is resident, or a bank slot is free/evictable.  The
+        scheduler uses this as back-pressure: when every resident
+        tenant is pinned by in-flight requests, new distinct tenants
+        wait in the queue instead of crashing the replay."""
+        if int(tenant_id) in self._slot_of or self._free:
+            return True
+        return any(self._pins.get(t, 0) == 0 for t in self._lru)
+
+    def acquire(self, tenant_id: int) -> int:
+        """Pin ``tenant_id`` into the bank; returns its slot id.
+
+        Cache hit: bump LRU recency.  Miss: take a free slot, else evict
+        the least-recently-used *unpinned* tenant; swap the tenant's
+        adapters into that row (one jitted functional row update — leaf
+        shapes never change, so nothing retraces)."""
+        self.validate(tenant_id)
+        tid = int(tenant_id)
+        slot = self._slot_of.get(tid)
+        if slot is not None:
+            self.stats["hits"] += 1
+        else:
+            self.stats["misses"] += 1
+            slot = self._take_slot()
+            self._slot_of[tid] = slot
+            self._tenant_of[slot] = tid
+            self._swap_in(slot, self.adapters_for(tid))
+        self._lru[tid] = None
+        self._lru.move_to_end(tid)
+        self._pins[tid] = self._pins.get(tid, 0) + 1
+        return slot
+
+    def release(self, tenant_id: int) -> None:
+        """Unpin one in-flight request; the tenant stays resident (warm)
+        until LRU eviction needs its slot."""
+        tid = int(tenant_id)
+        n = self._pins.get(tid, 0)
+        if n <= 0:
+            raise ValueError(f"tenant {tid} released but not acquired")
+        self._pins[tid] = n - 1
+
+    def _take_slot(self) -> int:
+        if self._free:
+            return self._free.pop()
+        for tid in self._lru:                      # least recent first
+            if self._pins.get(tid, 0) == 0:
+                slot = self._slot_of.pop(tid)
+                del self._tenant_of[slot]
+                del self._lru[tid]
+                self._pins.pop(tid, None)
+                self.stats["evictions"] += 1
+                return slot
+        raise RuntimeError(f"all {self.capacity} resident tenants are "
+                           f"pinned by in-flight requests")
+
+    def _swap_in(self, slot: int, adapters: Params) -> None:
+        t0 = time.perf_counter()
+        self.bank = self._swap(self.bank, adapters, jnp.int32(slot))
+        jax.block_until_ready(jax.tree_util.tree_leaves(self.bank.tree)[0])
+        self.stats["swaps"] += 1
+        self.stats["swap_s"] += time.perf_counter() - t0
+
+    # -- introspection ------------------------------------------------
+
+    def resident(self) -> dict[int, int]:
+        """tenant id → slot for every loaded tenant."""
+        return dict(self._slot_of)
+
+    def slot_tenant(self, slot: int) -> Optional[int]:
+        return self._tenant_of.get(slot)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)

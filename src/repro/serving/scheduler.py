@@ -1,0 +1,200 @@
+"""Request-level scheduling for the continuous-batching serve engine.
+
+Host-side only — no jax in this module.  Three pieces (DESIGN.md §9):
+
+* :class:`Request` / :class:`FCFSQueue` — the admission queue.  FCFS by
+  arrival time; a request becomes *ready* once the (simulated or wall)
+  clock passes its arrival timestamp.
+* :class:`Scheduler` — the prefill/decode interleaving policy.  Each
+  tick admits ready requests into free engine slots (prefill-into-slot,
+  newest tenant adapters acquired from the registry), then runs ONE
+  fused batched decode step for every active slot.  Admission is
+  bounded per tick (``max_admits_per_tick``) so a burst of arrivals
+  cannot starve in-flight decodes.
+* :func:`synthetic_workload` — Poisson arrivals over a Zipf-distributed
+  tenant universe, the standard open-loop serving-benchmark shape: a
+  few tenants are hot, a long tail is cold, and when the universe is
+  larger than the registry capacity the tail forces mid-traffic
+  onboarding + LRU eviction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its lifecycle bookkeeping."""
+    rid: int
+    tenant_id: int
+    prompt: np.ndarray                 # (P_true,) int32 token ids
+    max_new_tokens: int                # total generated incl. first token
+    arrival_s: float = 0.0             # offset from replay start
+    # filled in by the engine:
+    admit_s: Optional[float] = None
+    first_token_s: Optional[float] = None
+    finish_s: Optional[float] = None
+    slot: Optional[int] = None
+    tokens: list = dataclasses.field(default_factory=list)
+    step_s: list = dataclasses.field(default_factory=list)  # per-token
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new_tokens
+
+
+class FCFSQueue:
+    """First-come-first-served admission queue ordered by arrival."""
+
+    def __init__(self, requests=()):
+        self._q = deque(sorted(requests, key=lambda r: r.arrival_s))
+
+    def submit(self, req: Request) -> None:
+        if self._q and req.arrival_s < self._q[-1].arrival_s:
+            self._q = deque(sorted([*self._q, req],
+                                   key=lambda r: r.arrival_s))
+        else:
+            self._q.append(req)
+
+    def pop_ready(self, now: float) -> Optional[Request]:
+        if self._q and self._q[0].arrival_s <= now:
+            return self._q.popleft()
+        return None
+
+    def requeue(self, req: Request) -> None:
+        """Put a popped-but-unadmittable request back at the head
+        (back-pressure keeps FCFS order)."""
+        self._q.appendleft(req)
+
+    def next_arrival(self) -> Optional[float]:
+        return self._q[0].arrival_s if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class SlotAllocator:
+    """Free-list over the engine's fixed decode slots."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self._free = deque(range(n_slots))
+
+    def alloc(self) -> Optional[int]:
+        return self._free.popleft() if self._free else None
+
+    def free(self, slot: int) -> None:
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} out of range")
+        if slot in self._free:
+            raise ValueError(f"slot {slot} double-freed")
+        self._free.append(slot)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+
+class Scheduler:
+    """Drives a :class:`~repro.serving.engine.ServeEngine` over a
+    request stream: admit-then-step until the queue drains."""
+
+    def __init__(self, engine, *, max_admits_per_tick: Optional[int] = None):
+        self.engine = engine
+        self.max_admits = max_admits_per_tick or engine.slots
+
+    def run(self, requests, *, clock: Optional[Callable[[], float]] = None
+            ) -> list[Request]:
+        """Replay ``requests``; returns them completed, in finish order.
+
+        ``clock`` defaults to wall time since the call started, which
+        makes Poisson arrival offsets real pacing; pass e.g.
+        ``lambda: float('inf')`` to replay as-fast-as-possible (every
+        request immediately ready — the saturation/benchmark mode).
+        """
+        queue = FCFSQueue(requests)
+        t0 = time.perf_counter()
+        self.engine.start_clock(t0)    # request timestamps share origin
+        now = clock if clock is not None else (
+            lambda: time.perf_counter() - t0)
+        done: list[Request] = []
+        while len(queue) or self.engine.n_active:
+            admitted = 0
+            while (admitted < self.max_admits and self.engine.n_free
+                    and (req := queue.pop_ready(now())) is not None):
+                if not self.engine.can_admit(req):
+                    # back-pressure: every resident tenant's bank slot
+                    # is pinned by in-flight requests — this (distinct)
+                    # tenant waits its FCFS turn until one retires
+                    queue.requeue(req)
+                    break
+                done.extend(self.engine.admit(req))
+                admitted += 1
+            if self.engine.n_active:
+                done.extend(self.engine.step())
+            elif len(queue):
+                # idle: nothing in flight, next arrival in the future
+                nxt = queue.next_arrival()
+                wait = nxt - now()
+                if wait > 0 and wait != float("inf"):
+                    time.sleep(min(wait, 0.05))
+        return done
+
+
+def synthetic_workload(n_requests: int, n_tenants: int, *, vocab: int,
+                       rate_rps: Optional[float] = None, zipf_a: float = 1.1,
+                       prompt_lens: tuple[int, int] = (8, 32),
+                       gen_lens: tuple[int, int] = (4, 16),
+                       seed: int = 0) -> list[Request]:
+    """Poisson arrivals (``rate_rps`` requests/s; None = all at t=0)
+    over a Zipf(``zipf_a``) tenant distribution — tenant 0 hottest.
+
+    When ``n_tenants`` exceeds the registry capacity the Zipf tail
+    guarantees cold tenants arrive mid-traffic and force eviction."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n_tenants + 1, dtype=np.float64)
+    probs = ranks ** -zipf_a
+    probs /= probs.sum()
+    arrivals = (np.zeros(n_requests) if not rate_rps else
+                np.cumsum(rng.exponential(1.0 / rate_rps, n_requests)))
+    out = []
+    for i in range(n_requests):
+        plen = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
+        out.append(Request(
+            rid=i,
+            tenant_id=int(rng.choice(n_tenants, p=probs)),
+            prompt=rng.integers(0, vocab, plen).astype(np.int32),
+            max_new_tokens=int(rng.integers(gen_lens[0], gen_lens[1] + 1)),
+            arrival_s=float(arrivals[i])))
+    return out
+
+
+def summarize(completed: list[Request]) -> dict:
+    """Aggregate serving metrics over a finished replay."""
+    if not completed:
+        return dict(n_requests=0)
+    toks = sum(len(r.tokens) for r in completed)
+    t_first = min(r.admit_s for r in completed)
+    t_last = max(r.finish_s for r in completed)
+    span = max(t_last - t_first, 1e-9)
+    step_ms = np.array([s * 1e3 for r in completed for s in r.step_s])
+    ttft_ms = np.array([(r.first_token_s - r.arrival_s) * 1e3
+                        for r in completed])
+    return dict(
+        n_requests=len(completed),
+        generated_tokens=toks,
+        throughput_tok_s=toks / span,
+        p50_ms_per_token=float(np.percentile(step_ms, 50))
+        if step_ms.size else float("nan"),
+        p95_ms_per_token=float(np.percentile(step_ms, 95))
+        if step_ms.size else float("nan"),
+        ttft_p50_ms=float(np.percentile(ttft_ms, 50)),
+        ttft_p95_ms=float(np.percentile(ttft_ms, 95)),
+        span_s=span,
+    )
