@@ -26,6 +26,13 @@ pallas), five row kinds over the smoke serving model:
     Static-batch decode step against tenant-0-merged weights at the
     same batch width — the zero-isolation baseline; payload ``derived``
     records the bank-vs-merged overhead ratio.
+``serve_trace_mamba2`` / ``serve_trace_rglru`` / ``serve_trace_hybrid``
+    (what=replay) — the same churning replay over the *recurrent*
+    decoder families the engine serves since pad-invariant prefill
+    (DESIGN.md §10): pure-SSD Mamba-2, a pure RG-LRU pattern, and
+    RecurrentGemma's rglru/rglru/local_attn hybrid.  Each row asserts
+    zero retraces after warmup and real tenant churn, so the serving
+    breadth claim is continuously benchmarked, not just unit-tested.
 
 Honest labeling off-TPU mirrors kernels_suite: the pallas backend runs
 the interpret-mode emulator there, so pallas rows are timed at the tiny
@@ -37,8 +44,6 @@ smoke gated against ``benchmarks/baselines/BENCH_serve_tiny.json``.
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -46,25 +51,50 @@ import numpy as np
 from benchmarks._common import time_us
 
 ROW_OPS = ("serve_trace", "serve_decode_step", "serve_prefill_slot",
-           "tenant_churn", "serve_merged_step")
+           "tenant_churn", "serve_merged_step", "serve_trace_mamba2",
+           "serve_trace_rglru", "serve_trace_hybrid")
 
 SERVE_SHAPES = {
     "serving": dict(slots=8, buckets=(16, 32), gen=16, capacity=16,
                     universe=64, requests=48, rate=None, seed=0),
     "tiny": dict(slots=2, buckets=(8,), gen=4, capacity=3, universe=8,
                  requests=6, rate=None, seed=0),
+    # recurrent-family replays run one small grid at every shape level:
+    # the row exists to keep the serving-breadth claim benchmarked (and
+    # retrace-free), not to stress a big batch
+    "family": dict(slots=2, buckets=(8,), gen=4, capacity=2, universe=6,
+                   requests=8, rate=None, seed=0),
 }
 
 
-def _build(backend: str, grid: dict):
+def _family_archs():
+    """(op suffix → config, peft targets) for the recurrent families."""
+    from repro.configs import get_config, peft_targets
+    from repro.models import ModelConfig
+    rglru_cfg = ModelConfig(
+        name="rglru-smoke", n_layers=2, d_model=64, n_heads=4, n_kv=1,
+        d_ff=128, vocab=256, block_pattern=("rglru",), rnn_width=64,
+        rnn_heads=4, act="gelu_tanh", remat="none")
+    return (
+        ("serve_trace_mamba2", get_config("mamba2-1.3b", "smoke"),
+         peft_targets("mamba2-1.3b")),
+        ("serve_trace_rglru", rglru_cfg, "in_x|in_y|out_proj"),
+        ("serve_trace_hybrid", get_config("recurrentgemma-9b", "smoke"),
+         peft_targets("recurrentgemma-9b")),
+    )
+
+
+def _build(backend: str, grid: dict, cfg=None, targets=None):
     from repro.configs import get_config, peft_targets
     from repro.core.transforms import PEFTConfig
     from repro.models import init_model
     from repro.serving import AdapterRegistry, ServeEngine
 
-    cfg = get_config("smollm-360m", "smoke")
-    peft = PEFTConfig(method="ether", n_blocks=4,
-                      targets=peft_targets("smollm-360m"), backend=backend)
+    if cfg is None:
+        cfg = get_config("smollm-360m", "smoke")
+        targets = peft_targets("smollm-360m")
+    peft = PEFTConfig(method="ether", n_blocks=4, targets=targets,
+                      backend=backend)
     rng = jax.random.PRNGKey(0)
     params = init_model(rng, cfg)
     registry = AdapterRegistry(params, peft, grid["capacity"],
@@ -75,6 +105,63 @@ def _build(backend: str, grid: dict):
                          prompt_buckets=grid["buckets"],
                          max_new_tokens=grid["gen"])
     return cfg, peft, params, registry, engine
+
+
+def _replay_entry(op: str, backend: str, mode: str, grid: dict,
+                  cfg, registry, engine, reps: int = 2) -> dict:
+    """One churning Scheduler replay → a serve_trace-style row.  Asserts
+    zero retraces after warmup and (universe > capacity ⇒) evictions.
+
+    The replay is end-to-end wall clock (host scheduling included), so
+    like ``time_us`` the row keeps the best of ``reps`` replays — the
+    min is the stable systematic-cost estimator on a contended box."""
+    import copy
+
+    from repro.core.peft import validate_tenant_ids
+    from repro.serving import Scheduler, summarize, synthetic_workload
+
+    snap = engine.warmup()
+    workload = synthetic_workload(
+        grid["requests"], grid["universe"], vocab=cfg.vocab,
+        rate_rps=grid["rate"], prompt_lens=(4, grid["buckets"][-1]),
+        gen_lens=(2, grid["gen"]), seed=grid["seed"])
+    validate_tenant_ids([r.tenant_id for r in workload], grid["universe"])
+    s = None
+    for _ in range(max(1, reps)):
+        ev0 = registry.stats["evictions"]
+        sched = Scheduler(engine)
+        done = sched.run(copy.deepcopy(workload),
+                         clock=lambda: float("inf"))
+        engine.assert_no_retrace(snap)
+        if sched.dropped or not done:
+            # the synthetic workload is entirely valid for this engine:
+            # a drop here means admission regressed into rejecting good
+            # requests — which must fail the suite, not pass the gate
+            # with quietly shed load
+            raise SystemExit(
+                f"{op}: {len(sched.dropped)} of {len(workload)} valid "
+                f"requests rejected at admission")
+        cand = summarize(done, dropped=len(sched.dropped))
+        # every reported field must describe the SAME rep: later reps
+        # start with a warm registry, so churn differs per rep
+        cand["evictions"] = registry.stats["evictions"] - ev0
+        if s is None or cand["throughput_tok_s"] > s["throughput_tok_s"]:
+            s = cand
+    if (len({r.tenant_id for r in workload}) > grid["capacity"]
+            and not registry.stats["evictions"]):
+        raise SystemExit(f"{op}: universe exceeded capacity but nothing "
+                         f"was evicted — churn not exercised")
+    return dict(
+        op=op, backend=backend, kind="decode", what="replay", mode=mode,
+        shape=dict(batch=grid["slots"], tokens=1, d=cfg.d_model),
+        us_per_call=round(1e6 / max(s["throughput_tok_s"], 1e-9), 2),
+        tok_s=round(s["throughput_tok_s"], 2),
+        p50_ms=round(s["p50_ms_per_token"], 3),
+        p95_ms=round(s["p95_ms_per_token"], 3),
+        ttft_p50_ms=round(s["ttft_p50_ms"], 2),
+        ttft_p95_ms=round(s["ttft_p95_ms"], 2),
+        n_requests=s["n_requests"], n_dropped=s["n_dropped"],
+        evictions=s["evictions"])
 
 
 def _saturated_state(engine, grid):
@@ -99,9 +186,8 @@ def run_suite(shapes: str = "serving", include_interp: bool = False,
 
     Raises SystemExit if any (op, backend) row is missing (CI contract).
     """
-    from repro.core.peft import merge_params, validate_tenant_ids
+    from repro.core.peft import merge_params
     from repro.launch.serve import make_serving_fns
-    from repro.serving import Scheduler, summarize, synthetic_workload
 
     grid_name = "serving" if shapes == "serving" else "tiny"
     on_tpu = jax.default_backend() == "tpu"
@@ -115,31 +201,18 @@ def run_suite(shapes: str = "serving", include_interp: bool = False,
                 "compiled" if backend == "pallas" else "xla")
         cfg, peft, params, registry, engine = _build(backend, grid)
         d = cfg.d_model
-        snap = engine.warmup()
 
         # --- full replay (throughput + latency tails + churn) --------
-        workload = synthetic_workload(
-            grid["requests"], grid["universe"], vocab=cfg.vocab,
-            rate_rps=grid["rate"], prompt_lens=(4, grid["buckets"][-1]),
-            gen_lens=(2, grid["gen"]), seed=grid["seed"])
-        validate_tenant_ids([r.tenant_id for r in workload],
-                            grid["universe"])
-        done = Scheduler(engine).run(workload,
-                                     clock=lambda: float("inf"))
-        engine.assert_no_retrace(snap)
-        s = summarize(done)
-        entries.append(dict(
-            op="serve_trace", backend=backend, kind="decode",
-            what="replay", mode=mode,
-            shape=dict(batch=grid["slots"], tokens=1, d=d),
-            us_per_call=round(1e6 / max(s["throughput_tok_s"], 1e-9), 2),
-            tok_s=round(s["throughput_tok_s"], 2),
-            p50_ms=round(s["p50_ms_per_token"], 3),
-            p95_ms=round(s["p95_ms_per_token"], 3),
-            ttft_p50_ms=round(s["ttft_p50_ms"], 2),
-            ttft_p95_ms=round(s["ttft_p95_ms"], 2),
-            n_requests=s["n_requests"],
-            evictions=registry.stats["evictions"]))
+        entries.append(_replay_entry("serve_trace", backend, mode, grid,
+                                     cfg, registry, engine))
+
+        # --- recurrent families: pad-invariant slot serving -----------
+        fgrid = dict(SERVE_SHAPES["family"])
+        for fop, fcfg, ftargets in _family_archs():
+            _, _, _, freg, feng = _build(backend, fgrid, cfg=fcfg,
+                                         targets=ftargets)
+            entries.append(_replay_entry(fop, backend, mode, fgrid,
+                                         fcfg, freg, feng))
 
         # --- fused decode step, all slots active ----------------------
         state = _saturated_state(engine, grid)
@@ -199,13 +272,20 @@ def run_suite(shapes: str = "serving", include_interp: bool = False,
                          f"{missing}")
     return dict(
         suite="serve", shapes=shapes, platform=jax.default_backend(),
-        jax=jax.__version__, arch="smollm-360m/smoke",
+        jax=jax.__version__,
+        arch=dict(main="smollm-360m/smoke",
+                  serve_trace_mamba2="mamba2-1.3b/smoke",
+                  serve_trace_rglru="rglru-smoke (pure rglru pattern)",
+                  serve_trace_hybrid="recurrentgemma-9b/smoke"),
         grids={k: {kk: list(vv) if isinstance(vv, tuple) else vv
                    for kk, vv in g.items()}
                for k, g in SERVE_SHAPES.items()},
         note=("pallas rows off-TPU are interpret-mode emulation at the "
               "tiny grid; jnp rows are the CPU-comparable numbers; "
-              "serve_trace us_per_call = 1e6/throughput_tok_s"),
+              "serve_trace* us_per_call = 1e6/throughput_tok_s; "
+              "serve_trace_{mamba2,rglru,hybrid} replay the recurrent "
+              "families at the 'family' grid (pad-invariant prefill, "
+              "DESIGN.md §10)"),
         derived=derived,
         entries=entries,
     )

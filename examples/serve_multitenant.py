@@ -8,7 +8,13 @@ fused batched decode gathers each sequence's hyperplanes on the fly —
 no weight swapping, no per-tenant batches, no recompiles (contrast
 with multi-LoRA serving which must fit r×(d+f) per tenant).
 
+``--arch`` picks the decoder family: attention (smollm-360m) serves via
+causal pad masking, Mamba-2 and RecurrentGemma via pad-invariant
+recurrent prefill (per-slot SSM/RG-LRU state, DESIGN.md §10).
+
     PYTHONPATH=src python examples/serve_multitenant.py --tenants 64
+    PYTHONPATH=src python examples/serve_multitenant.py \
+        --arch mamba2-1.3b --tenants 32
 """
 
 import argparse
@@ -27,6 +33,9 @@ from repro.serving import (AdapterRegistry, Scheduler, ServeEngine,
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m",
+                    choices=("smollm-360m", "mamba2-1.3b",
+                             "recurrentgemma-9b"))
     ap.add_argument("--tenants", type=int, default=64,
                     help="tenant universe; the device bank holds 1/4")
     ap.add_argument("--slots", type=int, default=4)
@@ -37,12 +46,20 @@ def main():
     ap.add_argument("--backend", default="auto")
     args = ap.parse_args()
 
-    cfg = get_config("smollm-360m", "smoke")
+    cfg = get_config(args.arch, "smoke")
     rng = jax.random.PRNGKey(0)
     params = init_model(rng, cfg)
     peft = PEFTConfig(method=args.method, n_blocks=4,
-                      targets=peft_targets("smollm-360m"),
+                      targets=peft_targets(args.arch),
                       backend=args.backend)
+    # windowed hybrids: keep bucket + gen inside the attention window
+    # (ring wrap is rejected at engine construction); the smoke
+    # RecurrentGemma window is 16
+    window = getattr(cfg, "window", None)
+    bucket = 16 if window is None else min(16, window - args.gen)
+    if bucket < 4:
+        raise SystemExit(f"--gen {args.gen} leaves no room inside the "
+                         f"attention window {window}")
 
     capacity = max(2, args.tenants // 4)
     registry = AdapterRegistry(params, peft, capacity,
@@ -53,7 +70,8 @@ def main():
           f"= {kb:.1f} KB HBM ({kb / capacity:.2f} KB/tenant)")
 
     engine = ServeEngine(cfg, params, registry, peft, slots=args.slots,
-                         prompt_buckets=(16,), max_new_tokens=args.gen)
+                         prompt_buckets=(bucket,),
+                         max_new_tokens=args.gen)
     snap = engine.warmup()
 
     # a malformed tenant id raises at the frontend instead of silently
@@ -65,12 +83,13 @@ def main():
 
     workload = synthetic_workload(args.requests, args.tenants,
                                   vocab=cfg.vocab, rate_rps=None,
-                                  prompt_lens=(4, 16),
+                                  prompt_lens=(4, bucket),
                                   gen_lens=(2, args.gen), seed=3)
-    done = Scheduler(engine).run(copy.deepcopy(workload),
-                                 clock=lambda: float("inf"))
+    sched = Scheduler(engine)
+    done = sched.run(copy.deepcopy(workload),
+                     clock=lambda: float("inf"))
     engine.assert_no_retrace(snap)
-    s = summarize(done)
+    s = summarize(done, dropped=len(sched.dropped))
     print(f"served {s['n_requests']} requests / "
           f"{s['generated_tokens']} tokens: "
           f"{s['throughput_tok_s']:.0f} tok/s, "

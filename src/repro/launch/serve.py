@@ -29,7 +29,17 @@ so cold tenants are onboarded (functional bank-row swaps) and LRU
 tenants evicted mid-traffic.  Requests are admitted into free decode
 slots and retired as they finish — with zero recompiles after warmup,
 asserted via the engine's jit-cache-miss counter.  Reports throughput,
-p50/p95 per-token latency, time-to-first-token, and registry churn.
+p50/p95 per-token latency, time-to-first-token, registry churn, and
+admission-rejected (dropped) requests — one malformed request in a
+trace is counted and shed, never a replay abort.
+
+All four decoder families serve through the engine: attention models
+via causal pad masking, Mamba-2 (``--arch mamba2-1.3b``) and
+RecurrentGemma (``--arch recurrentgemma-9b``) via pad-invariant
+recurrent prefill — pad positions are identity state updates, so the
+per-slot SSM/RG-LRU state equals the unpadded prompt's (DESIGN.md
+§10).  For windowed-attention hybrids keep the largest bucket + --gen
+within ``cfg.window`` (ring wrap is rejected at engine construction).
 
 ``--method`` / ``--backend {jnp,pallas,auto}`` select the ETHER variant
 and execution backend (core.execute) in every mode.
@@ -146,15 +156,17 @@ def run_trace(args, cfg, peft, params, rng):
           f"{args.rate if args.rate > 0 else 'inf'}/s, "
           f"Zipf a={args.zipf_a})")
 
-    done = Scheduler(engine).run(workload)
+    sched = Scheduler(engine)
+    done = sched.run(workload)
     engine.assert_no_retrace(snap)
     if n_distinct > capacity and not registry.stats["evictions"]:
         raise AssertionError("distinct tenants exceeded bank capacity "
                              "but nothing was evicted")
 
-    s = summarize(done)
+    s = summarize(done, dropped=len(sched.dropped))
     r = registry.stats
-    print(f"completed {s['n_requests']} requests, "
+    print(f"completed {s['n_requests']} requests "
+          f"({s['n_dropped']} rejected at admission), "
           f"{s['generated_tokens']} tokens in {s['span_s']:.2f} s")
     print(f"throughput: {s['throughput_tok_s']:.1f} tok/s   "
           f"per-token latency p50 {s['p50_ms_per_token']:.2f} ms / "

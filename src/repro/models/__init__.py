@@ -1,7 +1,7 @@
 from repro.models.backbone import ModelConfig
 from repro.models.encdec import EncDecConfig
 from repro.models.api import (decode_step, init_cache, init_model, prefill,
-                              train_loss)
+                              train_loss, validate_true_lens)
 
 __all__ = ["ModelConfig", "EncDecConfig", "decode_step", "init_cache",
-           "init_model", "prefill", "train_loss"]
+           "init_model", "prefill", "train_loss", "validate_true_lens"]

@@ -16,6 +16,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.transforms import PEFTConfig
 from repro.models import backbone, encdec
@@ -80,6 +81,33 @@ def _chunked_ce_encdec(params, cfg, hidden, labels, mask):
     return jnp.sum((logz - gold) * m) / jnp.maximum(jnp.sum(m), 1.0)
 
 
+def validate_true_lens(true_lens, seq_len: int) -> np.ndarray:
+    """Host-side frontend guard for right-padded prefill, mirroring
+    :func:`repro.core.peft.validate_tenant_ids`: the last-real-token
+    gather in :func:`prefill` is *unclamped* jax indexing, so
+    ``true_lens = 0`` yields index ``-1`` — which silently wraps to the
+    last *padded* column and returns pad logits — and ``true_lens >
+    seq_len`` clamps onto the wrong token.  Bad lengths must therefore
+    raise at every serving frontend before they reach a traced gather.
+
+    Must be called on concrete (host) values; returns int32 numpy."""
+    if isinstance(true_lens, jax.core.Tracer):
+        raise TypeError("validate_true_lens is a host-side frontend "
+                        "guard; it cannot check traced lengths — "
+                        "validate before entering jit (as the serve "
+                        "engine does at admission)")
+    arr = np.asarray(true_lens)
+    if arr.size and not np.issubdtype(arr.dtype, np.integer):
+        raise TypeError(f"true_lens must be integers, got {arr.dtype}")
+    bad = arr[(arr < 1) | (arr > seq_len)] if arr.size else arr
+    if bad.size:
+        raise ValueError(f"true_lens {sorted(set(bad.tolist()))} out of "
+                         f"range [1, {seq_len}] — 0 would gather the "
+                         f"last padded column, > seq_len the wrong "
+                         f"token")
+    return arr.astype(np.int32)
+
+
 def _resolve_adapters(adapters, tenant_ids):
     """Multi-tenant serving: an AdapterBank plus per-request tenant ids
     becomes a request-scoped adapter tree (bank + ids at every module);
@@ -108,8 +136,12 @@ def prefill(params: Params, adapters: Optional[Params], batch: dict, cfg,
     fixed pad buckets): the returned logits are gathered at each row's
     last *real* token, position ``true_lens[b] - 1``, instead of the
     padded last column.  Causal masking keeps positions < true_lens
-    unaffected by the pads; the engine overwrites pad-position KV before
-    any decode step can attend to it (DESIGN.md §9)."""
+    unaffected by the pads (attention), and recurrent mixers mask pad
+    positions into identity state updates so the returned caches equal
+    the unpadded prompt's (DESIGN.md §9/§10).  Concrete lengths are
+    validated here (:func:`validate_true_lens`); traced lengths (jitted
+    callers like the serve engine) must be validated at the frontend
+    before entering jit — the gather below is unclamped by contract."""
     adapters = _resolve_adapters(adapters, tenant_ids)
     if isinstance(cfg, EncDecConfig):
         if true_lens is not None:
@@ -122,13 +154,18 @@ def prefill(params: Params, adapters: Optional[Params], batch: dict, cfg,
         logits = encdec.logits_fn(params, hidden[:, -1:])
         return cache, logits
 
-    hidden, cache, _ = backbone.forward(
-        params, cfg, tokens=batch["tokens"], adapters=adapters, peft=peft,
-        mode="prefill", image_embeds=batch.get("image_embeds"))
     if true_lens is not None:
         if cfg.frontend == "vision" and batch.get("image_embeds") is not None:
             raise NotImplementedError("true_lens prefill does not support "
                                       "prepended frontend tokens")
+        if not isinstance(true_lens, jax.core.Tracer):
+            true_lens = validate_true_lens(true_lens,
+                                           batch["tokens"].shape[1])
+    hidden, cache, _ = backbone.forward(
+        params, cfg, tokens=batch["tokens"], adapters=adapters, peft=peft,
+        mode="prefill", image_embeds=batch.get("image_embeds"),
+        true_lens=true_lens)
+    if true_lens is not None:
         idx = jnp.asarray(true_lens, jnp.int32) - 1        # (B,)
         last = jnp.take_along_axis(
             hidden, idx[:, None, None].astype(jnp.int32)

@@ -234,10 +234,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
 
 def _apply_layer(p: Params, x: jax.Array, btype: str, cfg: ModelConfig, *,
                  positions, cache=None, cache_pos=None, adapters=None,
-                 peft=None, keep_cache=True):
+                 peft=None, keep_cache=True, true_lens=None):
     """Pre-norm residual block: mixer + optional MLP. Returns
     (x, new_cache, aux). keep_cache=False (train mode) discards mixer
-    state so scan does not stack full-depth KV tensors."""
+    state so scan does not stack full-depth KV tensors.
+
+    ``true_lens`` (B,) marks each row's real prompt length under
+    right-padded prefill.  Recurrent mixers (ssd/rglru) use it to make
+    pad positions identity state updates (DESIGN.md §10); attention
+    ignores it — causal masking already hides pad KV."""
     h = L.rmsnorm(p["norm1"], x)
     a_mixer = get_adapter(adapters, "mixer")
     if btype in ("attn", "local_attn"):
@@ -251,12 +256,13 @@ def _apply_layer(p: Params, x: jax.Array, btype: str, cfg: ModelConfig, *,
         mixed, new_cache = mamba2_block(
             p["mixer"], h, d_model=cfg.d_model, cache=cache,
             chunk=cfg.ssm_chunk, adapters=a_mixer, peft=peft,
+            true_lens=true_lens,
             expand=cfg.ssm_expand, headdim=cfg.ssm_headdim,
             d_state=cfg.ssm_state, n_groups=cfg.ssm_groups)
     elif btype == "rglru":
         mixed, new_cache = rglru_block(
             p["mixer"], h, d_rnn=cfg.d_rnn, n_heads=cfg.n_rnn_heads,
-            cache=cache, adapters=a_mixer, peft=peft)
+            cache=cache, adapters=a_mixer, peft=peft, true_lens=true_lens)
     else:
         raise ValueError(btype)
     x = x + mixed
@@ -285,13 +291,20 @@ def _apply_layer(p: Params, x: jax.Array, btype: str, cfg: ModelConfig, *,
 
 def forward(params: Params, cfg: ModelConfig, *, tokens=None,
             inputs_embeds=None, adapters=None, peft=None, mode="train",
-            cache=None, image_embeds=None):
+            cache=None, image_embeds=None, true_lens=None):
     """Run the backbone.
 
     mode='train'/'prefill': full-sequence; prefill returns caches.
     mode='decode': tokens (B,1) against ``cache`` (advances cache['pos']).
     Returns (hidden (B,S,d), new_cache, aux).
+
+    ``true_lens`` (B,) — prefill-only: per-row real prompt lengths under
+    right padding, threaded to recurrent mixers so their returned state
+    equals the unpadded prompt's state (pad-invariant serving prefill,
+    DESIGN.md §10).
     """
+    if true_lens is not None and mode != "prefill":
+        raise ValueError("true_lens only applies to prefill mode")
     cd = cfg.cdt()
     if inputs_embeds is None:
         x = L.embed(params["embed"], tokens, cd)
@@ -341,7 +354,7 @@ def forward(params: Params, cfg: ModelConfig, *, tokens=None,
                     positions=positions, cache=lc, cache_pos=cache_pos,
                     adapters=get_adapter(unit_adapters, f"pos{j}")
                     if unit_adapters else None,
-                    peft=peft, keep_cache=keep_cache)
+                    peft=peft, keep_cache=keep_cache, true_lens=true_lens)
                 caches_out[f"pos{j}"] = nc
                 aux_u = jax.tree_util.tree_map(jnp.add, aux_u, aux)
             cx = shard_hidden(cx)   # keep scan carry sequence-sharded
@@ -377,7 +390,7 @@ def forward(params: Params, cfg: ModelConfig, *, tokens=None,
                 params["units"][f"layer{i}"], x, btype, cfg,
                 positions=positions, cache=lc, cache_pos=cache_pos,
                 adapters=get_adapter(adapters, "units", f"layer{i}"),
-                peft=peft, keep_cache=keep_cache)
+                peft=peft, keep_cache=keep_cache, true_lens=true_lens)
             new_cache[f"layer{i}"] = nc
             aux_sum = jax.tree_util.tree_map(jnp.add, aux_sum, aux)
 
@@ -387,7 +400,7 @@ def forward(params: Params, cfg: ModelConfig, *, tokens=None,
             params[f"rem{j}"], x, btype, cfg, positions=positions,
             cache=lc, cache_pos=cache_pos,
             adapters=get_adapter(adapters, f"rem{j}"), peft=peft,
-            keep_cache=keep_cache)
+            keep_cache=keep_cache, true_lens=true_lens)
         new_cache[f"rem{j}"] = nc
         aux_sum = jax.tree_util.tree_map(jnp.add, aux_sum, aux)
 

@@ -84,10 +84,22 @@ def rglru_scan(u: jax.Array, a_log: jax.Array,
 
 
 def rglru_block(p: Params, x: jax.Array, *, d_rnn: int, n_heads: int,
-                cache: Optional[Params] = None, adapters=None, peft=None):
+                cache: Optional[Params] = None, adapters=None, peft=None,
+                true_lens: Optional[jax.Array] = None):
     """Griffin recurrent block. Returns (out, new_cache).
 
     cache (decode): {"conv": (B, W-1, d_rnn), "h": (B, d_rnn)}.
+
+    ``true_lens`` (B,) makes right-padded prefill pad-invariant
+    (DESIGN.md §10): pad positions become identity state updates
+    (``a_t → 1`` i.e. ``log a_t → 0``, gated input ``→ 0``) and the
+    conv tail streams the last *real* inputs.  The returned state is
+    gathered at position ``true_lens - 1`` rather than read off the
+    scan's last (padded) position: identity pad steps preserve the
+    state *mathematically*, but ``associative_scan``'s combine tree
+    regroups under a longer sequence, so the propagated value can
+    differ from the unpadded oracle in the last ulp — the gather keeps
+    it bitwise-equal (f32).
     """
     y_branch = jax.nn.gelu(dense(p["in_y"], x,
                                  adapter=get_adapter(adapters, "in_y"),
@@ -95,7 +107,7 @@ def rglru_block(p: Params, x: jax.Array, *, d_rnn: int, n_heads: int,
     u = dense(p["in_x"], x, adapter=get_adapter(adapters, "in_x"), peft=peft)
     conv_state = cache["conv"] if cache is not None else None
     u, new_conv = _causal_conv(u, p["conv"]["kernel"], p["conv"]["bias"],
-                               conv_state)
+                               conv_state, true_lens=true_lens)
 
     r = jax.nn.sigmoid(_headwise(p["gate_a"]["kernel"], u, n_heads)
                        .astype(jnp.float32))
@@ -104,6 +116,11 @@ def rglru_block(p: Params, x: jax.Array, *, d_rnn: int, n_heads: int,
     a_log = -_C * jax.nn.softplus(p["lam"])[None, None] * r     # ≤ 0
     gated = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * a_log), 1e-12, 1.0))
     b_t = gated * (i * u.astype(jnp.float32))
+    if true_lens is not None:
+        tl = jnp.asarray(true_lens, jnp.int32)
+        valid = (jnp.arange(x.shape[1])[None] < tl[:, None])    # (B,S)
+        a_log = jnp.where(valid[..., None], a_log, 0.0)          # a_t = 1
+        b_t = jnp.where(valid[..., None], b_t, 0.0)              # no input
 
     if cache is not None and x.shape[1] == 1:
         h_prev = cache["h"].astype(jnp.float32)
@@ -113,6 +130,11 @@ def rglru_block(p: Params, x: jax.Array, *, d_rnn: int, n_heads: int,
     else:
         h0 = cache["h"] if cache is not None else None
         hs, final = rglru_scan(b_t, a_log, h0)
+        if true_lens is not None:
+            final = jnp.take_along_axis(
+                hs, jnp.broadcast_to((tl - 1)[:, None, None],
+                                     (hs.shape[0], 1, hs.shape[2])),
+                axis=1)[:, 0]
 
     out = hs.astype(x.dtype) * y_branch
     out = dense(p["out_proj"], out, adapter=get_adapter(adapters, "out_proj"),

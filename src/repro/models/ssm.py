@@ -50,11 +50,17 @@ def init_mamba2(rng, d_model: int, dtype, **kw) -> Params:
 
 
 def _causal_conv(x: jax.Array, kernel: jax.Array, bias: jax.Array,
-                 state: Optional[jax.Array] = None):
+                 state: Optional[jax.Array] = None,
+                 true_lens: Optional[jax.Array] = None):
     """Depthwise causal conv1d. x: (B, S, C); kernel: (W, C).
 
     Returns (y, new_state) where state holds the last W-1 inputs for
-    streaming decode.
+    streaming decode.  With right-padded prompts, ``true_lens`` (B,)
+    makes the streamed tail hold the last W-1 *real* inputs per row
+    (DESIGN.md §10): ctx index ``true_lens[b]`` is the first of them,
+    since ctx prepends W-1 state/zero entries before x.  Prompts
+    shorter than W-1 naturally pick up the leading zero-state entries
+    — exactly what an unpadded prompt of that length would stream.
     """
     w = kernel.shape[0]
     if state is None:
@@ -63,8 +69,14 @@ def _causal_conv(x: jax.Array, kernel: jax.Array, bias: jax.Array,
         ctx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
     y = sum(ctx[:, i:i + x.shape[1]] * kernel[i][None, None]
             for i in range(w))
-    new_state = ctx[:, -(w - 1):] if w > 1 else jnp.zeros(
-        (x.shape[0], 0, x.shape[2]), x.dtype)
+    if w <= 1:
+        new_state = jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    elif true_lens is None:
+        new_state = ctx[:, -(w - 1):]
+    else:
+        new_state = jax.vmap(
+            lambda c, t: jax.lax.dynamic_slice_in_dim(c, t, w - 1, axis=0)
+        )(ctx, jnp.asarray(true_lens, jnp.int32))
     return jax.nn.silu(y + bias[None, None]), new_state
 
 
@@ -137,11 +149,20 @@ def ssd_chunked(xv, a, b, c, *, chunk: int = 256,
 
 def mamba2_block(p: Params, x: jax.Array, *, d_model: int,
                  cache: Optional[Params] = None, chunk: int = 256,
-                 adapters=None, peft=None, **kw):
+                 adapters=None, peft=None,
+                 true_lens: Optional[jax.Array] = None, **kw):
     """Full Mamba-2 mixer. x: (B, S, d_model).
 
     cache (decode): {"conv": (B, W-1, C), "ssm": (B, H, N, P)}.
     Returns (out, new_cache).
+
+    ``true_lens`` (B,) makes right-padded prefill pad-invariant
+    (DESIGN.md §10): pad positions become identity state updates —
+    log-decay ``a → 0`` (decay exp(0)=1 passes the state through) and
+    ``xv → 0`` (no injection), the exact mechanism ``ssd_chunked``
+    already uses for its own chunk-multiple padding — and the streamed
+    conv tail is gathered at the last *real* inputs.  The returned
+    state is bitwise-equal (f32) to the unpadded prompt's state.
     """
     dims = ssm_dims(d_model, **kw)
     di, h, g, n, pd = (dims["d_inner"], dims["n_heads"], dims["n_groups"],
@@ -154,7 +175,7 @@ def mamba2_block(p: Params, x: jax.Array, *, d_model: int,
 
     conv_state = cache["conv"] if cache is not None else None
     xbc, new_conv = _causal_conv(xbc, p["conv"]["kernel"], p["conv"]["bias"],
-                                 conv_state)
+                                 conv_state, true_lens=true_lens)
     xs, b, c = jnp.split(xbc, [di, di + g * n], axis=-1)
     b = b.reshape(B, S, g, n)
     c = c.reshape(B, S, g, n)
@@ -164,6 +185,11 @@ def mamba2_block(p: Params, x: jax.Array, *, d_model: int,
                          + p["dt_bias"][None, None])        # (B,S,H)
     a = -jnp.exp(p["a_log"])[None, None] * dt                # log-decay ≤ 0
     xv = xh.astype(jnp.float32) * dt[..., None]
+    if true_lens is not None:
+        valid = (jnp.arange(S)[None] <
+                 jnp.asarray(true_lens, jnp.int32)[:, None])  # (B,S)
+        a = jnp.where(valid[..., None], a, 0.0)
+        xv = jnp.where(valid[..., None, None], xv, 0.0)
 
     if cache is not None and S == 1:
         # streaming decode: single recurrence step

@@ -8,9 +8,10 @@
 
 from repro.serving.engine import ServeEngine
 from repro.serving.registry import AdapterRegistry
-from repro.serving.scheduler import (FCFSQueue, Request, Scheduler,
-                                     SlotAllocator, summarize,
+from repro.serving.scheduler import (AdmissionError, FCFSQueue, Request,
+                                     Scheduler, SlotAllocator, summarize,
                                      synthetic_workload)
 
-__all__ = ["ServeEngine", "AdapterRegistry", "FCFSQueue", "Request",
-           "Scheduler", "SlotAllocator", "summarize", "synthetic_workload"]
+__all__ = ["ServeEngine", "AdapterRegistry", "AdmissionError", "FCFSQueue",
+           "Request", "Scheduler", "SlotAllocator", "summarize",
+           "synthetic_workload"]

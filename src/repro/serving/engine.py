@@ -1,24 +1,32 @@
 """Continuous-batching serve engine over fixed decode slots.
 
 The engine owns all device state for multi-tenant serving (DESIGN.md
-§9): a preallocated KV cache with one row per decode *slot*, a per-slot
-cursor vector (each slot decodes at its own absolute position), per-slot
-tenant-slot ids into the registry's fixed-capacity
-:class:`~repro.core.peft.AdapterBank`, and per-slot stop/length
-bookkeeping — all of it carried in a single pytree of FIXED shapes.
+§9): a preallocated cache with one row per decode *slot* — attention KV
+plus, for recurrent blocks, the slot's SSM state (H,N,P), depthwise-conv
+tails and RG-LRU hidden state (DESIGN.md §10) — a per-slot cursor vector
+(each slot decodes at its own absolute position; recurrent state is
+cursor-free), per-slot tenant-slot ids into the registry's
+fixed-capacity :class:`~repro.core.peft.AdapterBank`, and per-slot
+stop/length bookkeeping — all of it carried in a single pytree of FIXED
+shapes.  Admission overwrites a slot's cache row wholesale (functional
+zero-reset by construction: the prefilled B=1 row replaces every leaf),
+so retired slots never leak state into the next request.
 
 Exactly two jitted entry points touch the device:
 
 * ``prefill_into_slot`` (one compile per prompt pad bucket): run the
   padded prompt at batch 1, gather the last *real* token's logits
-  (``true_lens`` prefill), scatter the padded KV into the slot's cache
-  row, seed cursor/active/remaining/tenant for the slot, and sample the
-  first token — all inside the jit.
+  (``true_lens`` prefill — recurrent blocks mask pad positions into
+  identity state updates, so the streamed state equals the unpadded
+  prompt's), scatter the padded cache into the slot's row, seed
+  cursor/active/remaining/tenant for the slot, and sample the first
+  token — all inside the jit.
 * ``decode_step`` (one compile, ever): one fused batched greedy-decode
   step over ALL slots — adapter gather-and-reflect (the PR 2/3 batched
-  kernels, untouched underneath), attention against per-slot cursors,
-  argmax sampling, cursor/remaining/active updates.  Sampling lives
-  inside the jit so measured step time is device work.
+  kernels, untouched underneath), attention against per-slot cursors
+  and the fused single-step ssd/rglru recurrences, argmax sampling,
+  cursor/remaining/active updates.  Sampling lives inside the jit so
+  measured step time is device work.
 
 Admission and retirement are therefore pure data: a new request writes
 one cache row + four slot scalars (traced indices — no shape changes),
@@ -42,7 +50,7 @@ from repro.models import api
 from repro.models.backbone import ModelConfig
 from repro.models.encdec import EncDecConfig
 from repro.serving.registry import AdapterRegistry
-from repro.serving.scheduler import Request, SlotAllocator
+from repro.serving.scheduler import AdmissionError, Request, SlotAllocator
 
 Params = dict[str, Any]
 
@@ -50,21 +58,24 @@ DEFAULT_BUCKETS = (16, 32)
 
 
 def _check_servable(cfg, max_len: int) -> None:
-    """The slot engine needs right-padded prefill + per-slot cursors to
-    be exact; that holds for attention blocks (causal masking hides pad
-    KV until it is overwritten) but not for recurrent state."""
+    """The slot engine needs right-padded prefill to be exact per block
+    family: causal masking hides pad KV for attention blocks, and
+    recurrent blocks (ssd/rglru) run pad-invariant prefill — pad
+    positions are identity state updates, so the per-slot state written
+    at admission equals the unpadded prompt's state (DESIGN.md §10)."""
     if isinstance(cfg, EncDecConfig):
         raise NotImplementedError("serve engine is decoder-only")
     if getattr(cfg, "frontend", None) == "vision":
         raise NotImplementedError("serve engine does not support "
                                   "prepended frontend tokens")
     pattern = tuple(cfg.block_pattern) + tuple(cfg.remainder)
-    bad = [b for b in pattern if b not in ("attn", "local_attn")]
+    bad = [b for b in pattern
+           if b not in ("attn", "local_attn", "ssd", "rglru")]
     if bad:
         raise NotImplementedError(
-            f"recurrent-state blocks {sorted(set(bad))} cannot absorb "
-            f"right-padded prefill (pad tokens corrupt the running "
-            f"state); the slot engine serves attention-only models")
+            f"unknown block types {sorted(set(bad))}: the slot engine "
+            f"serves attn/local_attn (causal pad masking) and ssd/rglru "
+            f"(pad-invariant recurrent prefill) blocks")
     if ("local_attn" in pattern and cfg.window is not None
             and max_len > cfg.window):
         raise NotImplementedError(
@@ -152,9 +163,10 @@ class ServeEngine:
             tenant_ids=state["tenant"])
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         active = state["active"]
-        # inactive slots keep their cursor (their garbage write lands on
-        # the same in-bounds position every step and is fully overwritten
-        # by the next prefill-into-slot)
+        # inactive slots keep their cursor (their garbage KV write lands
+        # on the same in-bounds position every step, and their recurrent
+        # state drifts harmlessly — every cache leaf row is fully
+        # overwritten by the next prefill-into-slot)
         new_cache["cursor"] = jnp.where(active, new_cache["cursor"],
                                         cache["cursor"])
         remaining = jnp.where(active, state["remaining"] - 1,
@@ -224,8 +236,9 @@ class ServeEngine:
         for b in self.prompt_buckets:
             if prompt_len <= b:
                 return b
-        raise ValueError(f"prompt length {prompt_len} exceeds the "
-                         f"largest pad bucket {self.prompt_buckets[-1]}")
+        raise AdmissionError(
+            f"prompt length {prompt_len} exceeds the largest pad "
+            f"bucket {self.prompt_buckets[-1]}")
 
     def admit(self, req: Request) -> list[Request]:
         """Prefill ``req`` into a free slot (acquiring its tenant's bank
@@ -233,25 +246,35 @@ class ServeEngine:
         request in a list iff it finished immediately (1-token gen)."""
         plen = int(len(req.prompt))
         if plen < 1:
-            raise ValueError("empty prompt")
+            raise AdmissionError("empty prompt")
         if int(req.max_new_tokens) < 1:
-            raise ValueError("max_new_tokens must be >= 1")
+            raise AdmissionError("max_new_tokens must be >= 1")
         if plen + int(req.max_new_tokens) - 1 > self.max_len:
             # the last decode write would land past the slot's cache row
             # and be silently dropped (jax out-of-bounds scatter), so
             # every later token would read a cache missing recent KV
-            raise ValueError(
+            raise AdmissionError(
                 f"prompt ({plen}) + max_new_tokens "
                 f"({req.max_new_tokens}) - 1 exceeds the engine's "
                 f"max_len {self.max_len}")
         bucket = self.bucket_for(plen)
+        # host-side guard before the traced last-real-token gather: the
+        # jitted prefill cannot validate its traced true_len itself.
+        # Stays a bare ValueError — plen <= bucket is guaranteed by
+        # bucket_for above, so a raise here is an engine bug, not a bad
+        # request, and must NOT be shed as a drop.
+        api.validate_true_lens(plen, bucket)
         slot = self._alloc.alloc()
         if slot is None:
             raise RuntimeError("no free decode slot (check n_free first)")
         try:
             tslot = self.registry.acquire(req.tenant_id)   # validates id
-        except Exception:
+        except ValueError as e:
             self._alloc.free(slot)                     # don't leak it
+            # bad tenant id in the request → droppable rejection
+            raise AdmissionError(str(e)) from e
+        except Exception:
+            self._alloc.free(slot)
             raise
         # frontend guard on the *slot* indirection as well — a registry
         # bug must raise here, not clamp inside the bank gather

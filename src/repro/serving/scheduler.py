@@ -28,6 +28,15 @@ from typing import Callable, Optional
 import numpy as np
 
 
+class AdmissionError(ValueError):
+    """A *request* is invalid for the engine it was submitted to —
+    over-long prompt (no pad bucket fits), a generation that would run
+    past the slot's cache row, an empty prompt, a tenant id outside the
+    universe.  The scheduler counts-and-drops these; any other
+    exception out of ``engine.admit`` (engine/registry invariant
+    violations) propagates and aborts the replay, as it must."""
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request plus its lifecycle bookkeeping."""
@@ -103,11 +112,17 @@ class SlotAllocator:
 
 class Scheduler:
     """Drives a :class:`~repro.serving.engine.ServeEngine` over a
-    request stream: admit-then-step until the queue drains."""
+    request stream: admit-then-step until the queue drains.
+
+    Invalid requests (see :class:`AdmissionError`) are *counted and
+    dropped* at admission (``self.dropped``) instead of killing the
+    whole replay: one bad request in a trace must not abort the
+    benchmark run."""
 
     def __init__(self, engine, *, max_admits_per_tick: Optional[int] = None):
         self.engine = engine
         self.max_admits = max_admits_per_tick or engine.slots
+        self.dropped: list[Request] = []
 
     def run(self, requests, *, clock: Optional[Callable[[], float]] = None
             ) -> list[Request]:
@@ -117,7 +132,11 @@ class Scheduler:
         makes Poisson arrival offsets real pacing; pass e.g.
         ``lambda: float('inf')`` to replay as-fast-as-possible (every
         request immediately ready — the saturation/benchmark mode).
+
+        ``self.dropped`` describes THIS replay: it is reset here, so
+        read it after ``run`` returns and before the next call.
         """
+        self.dropped = []
         queue = FCFSQueue(requests)
         t0 = time.perf_counter()
         self.engine.start_clock(t0)    # request timestamps share origin
@@ -134,7 +153,16 @@ class Scheduler:
                     # tenant waits its FCFS turn until one retires
                     queue.requeue(req)
                     break
-                done.extend(self.engine.admit(req))
+                try:
+                    done.extend(self.engine.admit(req))
+                except AdmissionError:
+                    # rejected at admission (engine.admit leaks neither
+                    # slots nor registry pins on a raise); keep serving.
+                    # Only AdmissionError is shed — a bare ValueError
+                    # out of admit is an engine/registry invariant
+                    # violation and must abort the replay.
+                    self.dropped.append(req)
+                    continue
                 admitted += 1
             if self.engine.n_active:
                 done.extend(self.engine.step())
@@ -155,13 +183,20 @@ def synthetic_workload(n_requests: int, n_tenants: int, *, vocab: int,
     """Poisson arrivals (``rate_rps`` requests/s; None = all at t=0)
     over a Zipf(``zipf_a``) tenant distribution — tenant 0 hottest.
 
+    ``rate_rps`` must be positive or None: an explicit 0 (or negative)
+    rate is a caller bug, not a request for the all-at-t=0 saturation
+    mode, and raises instead of being silently coerced by falsiness.
+
     When ``n_tenants`` exceeds the registry capacity the Zipf tail
     guarantees cold tenants arrive mid-traffic and force eviction."""
+    if rate_rps is not None and rate_rps <= 0:
+        raise ValueError(f"rate_rps must be positive (got {rate_rps}); "
+                         f"pass None for all-arrive-at-t=0")
     rng = np.random.default_rng(seed)
     ranks = np.arange(1, n_tenants + 1, dtype=np.float64)
     probs = ranks ** -zipf_a
     probs /= probs.sum()
-    arrivals = (np.zeros(n_requests) if not rate_rps else
+    arrivals = (np.zeros(n_requests) if rate_rps is None else
                 np.cumsum(rng.exponential(1.0 / rate_rps, n_requests)))
     out = []
     for i in range(n_requests):
@@ -175,10 +210,12 @@ def synthetic_workload(n_requests: int, n_tenants: int, *, vocab: int,
     return out
 
 
-def summarize(completed: list[Request]) -> dict:
-    """Aggregate serving metrics over a finished replay."""
+def summarize(completed: list[Request], *, dropped: int = 0) -> dict:
+    """Aggregate serving metrics over a finished replay.  ``dropped``
+    (typically ``len(scheduler.dropped)``) surfaces admission-rejected
+    requests so a replay that silently shed load is visible."""
     if not completed:
-        return dict(n_requests=0)
+        return dict(n_requests=0, n_dropped=int(dropped))
     toks = sum(len(r.tokens) for r in completed)
     t_first = min(r.admit_s for r in completed)
     t_last = max(r.finish_s for r in completed)
@@ -188,6 +225,7 @@ def summarize(completed: list[Request]) -> dict:
                         for r in completed])
     return dict(
         n_requests=len(completed),
+        n_dropped=int(dropped),
         generated_tokens=toks,
         throughput_tok_s=toks / span,
         p50_ms_per_token=float(np.percentile(step_ms, 50))

@@ -318,14 +318,181 @@ def test_engine_rejects_oversized_generation(served):
     assert eng.n_free == eng.slots
 
 
-def test_engine_rejects_recurrent_and_encdec_models():
-    cfg = get_config("mamba2-1.3b", "smoke")
-    peft = PEFTConfig(method="ether", n_blocks=4,
-                      targets=peft_targets("mamba2-1.3b"))
+def test_engine_rejects_encdec_and_unknown_blocks():
+    """Recurrent families are servable now (pad-invariant prefill,
+    DESIGN.md §10); enc-dec and unknown block types still are not."""
+    from repro.models import EncDecConfig
+    from repro.models.backbone import ModelConfig
     params = {"stub": jnp.zeros(())}
     reg = tiny_registry(2)
-    with pytest.raises(NotImplementedError, match="recurrent"):
-        ServeEngine(cfg, params, reg, peft, slots=2)
+    peft = PEFTConfig(method="ether", n_blocks=4, targets="q_proj")
+    with pytest.raises(NotImplementedError, match="decoder-only"):
+        ServeEngine(EncDecConfig(), params, reg, peft, slots=2)
+    bogus = ModelConfig(name="bogus", block_pattern=("attn", "lstm"),
+                        n_layers=2)
+    with pytest.raises(NotImplementedError, match="unknown block"):
+        ServeEngine(bogus, params, reg, peft, slots=2)
+
+
+# ---------------------------------------------------------------------------
+# Recurrent families: pad-invariant prefill in the slot engine
+# ---------------------------------------------------------------------------
+
+def _serve_vs_oracle(arch, *, buckets, gen, n_req=9, seed=7):
+    """Replay a churning workload through the engine and compare every
+    request token-for-token against the unpadded one-shot path."""
+    from repro.launch.serve import _timed_generation, make_serving_fns
+    cfg = get_config(arch, "smoke")
+    peft = PEFTConfig(method="ether", n_blocks=4,
+                      targets=peft_targets(arch), backend="jnp")
+    params = init_model(RNG, cfg)
+    reg = AdapterRegistry(params, peft, capacity=3, n_tenants=8,
+                          rng=jax.random.fold_in(RNG, 1))
+    eng = ServeEngine(cfg, params, reg, peft, slots=3,
+                      prompt_buckets=buckets, max_new_tokens=gen)
+    snap = eng.warmup()
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i, tenant_id=int(rng.integers(0, 8)),
+                    prompt=rng.integers(0, cfg.vocab,
+                                        int(rng.integers(2,
+                                                         buckets[-1] + 1)))
+                    .astype(np.int32),
+                    max_new_tokens=int(rng.integers(1, gen + 1)))
+            for i in range(n_req)]
+    done = Scheduler(eng).run(copy.deepcopy(reqs),
+                              clock=lambda: float("inf"))
+    eng.assert_no_retrace(snap)
+    assert len(done) == n_req
+    assert reg.stats["evictions"] > 0          # tenant churn mid-flight
+    pf, st = make_serving_fns(cfg, peft, gen)
+    by = {r.rid: r for r in done}
+    for r in reqs:
+        bank1 = AdapterBank.stack([reg.adapters_for(r.tenant_id)],
+                                  params, peft)
+        _, _, toks = _timed_generation(
+            pf, st, params, bank1,
+            {"tokens": jnp.asarray(r.prompt)[None]},
+            r.max_new_tokens - 1, tenant_ids=np.zeros(1, np.int32))
+        assert by[r.rid].tokens == toks[0].tolist(), \
+            f"{arch} rid={r.rid} plen={len(r.prompt)}"
+
+
+def test_engine_serves_mamba2_pad_invariant():
+    """Pure-SSD model: prompts right-padded across two buckets, SSM
+    state + conv tails streamed per slot — tokens must equal the
+    unpadded one-shot oracle under mid-flight admit/retire/churn."""
+    _serve_vs_oracle("mamba2-1.3b", buckets=(8, 16), gen=8)
+
+
+def test_engine_serves_recurrentgemma_hybrid_pad_invariant():
+    """Hybrid rglru/rglru/local_attn pattern (scanned units + recurrent
+    remainder layers): RG-LRU hidden state, conv tails AND windowed KV
+    live per slot; max_len stays within the window (no ring wrap)."""
+    _serve_vs_oracle("recurrentgemma-9b", buckets=(8,), gen=8)
+
+
+def test_prefill_true_lens_validated_host_side():
+    """Satellite: the last-real-token gather is unclamped jax indexing —
+    true_lens=0 would wrap to the last *padded* column and silently
+    return pad logits; > S would clamp onto the wrong token.  Concrete
+    bad lengths must raise at the frontend."""
+    from repro.models import api, validate_true_lens
+    from repro.models.backbone import ModelConfig
+    cfg = ModelConfig(name="tl-smoke", n_layers=1, d_model=32, n_heads=1,
+                      n_kv=1, d_ff=64, vocab=64, scan_layers=False)
+    params = init_model(RNG, cfg)
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32)}
+    with pytest.raises(ValueError, match="true_lens"):
+        api.prefill(params, None, batch, cfg, None,
+                    true_lens=np.asarray([0, 4]))      # 0 → idx -1 wrap
+    with pytest.raises(ValueError, match="true_lens"):
+        api.prefill(params, None, batch, cfg, None,
+                    true_lens=np.asarray([4, 9]))      # 9 > S=8
+    with pytest.raises(TypeError):
+        api.prefill(params, None, batch, cfg, None,
+                    true_lens=np.asarray([1.5, 4.0]))  # non-integer
+    _, ok = api.prefill(params, None, batch, cfg, None,
+                        true_lens=np.asarray([1, 8]))  # bounds are legal
+    assert ok.shape[0] == 2
+    with pytest.raises(TypeError, match="host-side"):
+        jax.jit(lambda t: validate_true_lens(t, 8))(jnp.asarray([3]))
+
+
+def test_synthetic_workload_rejects_zero_rate():
+    """Satellite: an explicit rate_rps=0 was falsy-coerced into the
+    all-at-t=0 saturation mode; it must raise instead."""
+    with pytest.raises(ValueError, match="rate_rps"):
+        synthetic_workload(4, 2, vocab=64, rate_rps=0.0)
+    with pytest.raises(ValueError, match="rate_rps"):
+        synthetic_workload(4, 2, vocab=64, rate_rps=-1.0)
+    w = synthetic_workload(4, 2, vocab=64, rate_rps=None)
+    assert all(r.arrival_s == 0.0 for r in w)
+
+
+def test_scheduler_drops_invalid_requests_instead_of_aborting():
+    """Satellite: an over-long prompt / over-long generation must not
+    kill a trace replay — the scheduler counts-and-drops it at
+    admission and keeps serving, including through back-pressure (the
+    bad request requeued while the engine is saturated still gets
+    dropped, not looped forever)."""
+    from repro.models.backbone import ModelConfig
+    from repro.serving import summarize
+    cfg = ModelConfig(name="drop-smoke", n_layers=1, d_model=32, n_heads=1,
+                      n_kv=1, d_ff=64, vocab=64, scan_layers=False)
+    peft = PEFTConfig(method="ether", n_blocks=4, targets="q_proj",
+                      backend="jnp")
+    params = init_model(RNG, cfg)
+    reg = AdapterRegistry(params, peft, capacity=1, n_tenants=4,
+                          rng=jax.random.fold_in(RNG, 4))
+    eng = ServeEngine(cfg, params, reg, peft, slots=1, prompt_buckets=(8,),
+                      max_new_tokens=4)
+    eng.warmup()
+    good = [Request(rid=i, tenant_id=i, prompt=np.full(4, i, np.int32),
+                    max_new_tokens=3, arrival_s=0.0) for i in range(3)]
+    bad = [
+        # over-long prompt: no pad bucket fits (bucket_for raises)
+        Request(rid=90, tenant_id=0, prompt=np.zeros(9, np.int32),
+                max_new_tokens=2, arrival_s=0.0),
+        # over-long generation: decode would run past the cache row
+        Request(rid=91, tenant_id=1, prompt=np.zeros(8, np.int32),
+                max_new_tokens=eng.max_len, arrival_s=0.0),
+        # tenant outside the universe
+        Request(rid=92, tenant_id=99, prompt=np.zeros(4, np.int32),
+                max_new_tokens=2, arrival_s=0.0),
+    ]
+    # interleave so bad requests hit both a free and a saturated engine
+    # (slots=1 ⇒ while rid=0 decodes, rid=90 waits in the queue first)
+    reqs = [good[0], bad[0], good[1], bad[1], good[2], bad[2]]
+    sched = Scheduler(eng)
+    done = sched.run(reqs, clock=lambda: float("inf"))
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert all(len(r.tokens) == 3 for r in done)
+    assert sorted(r.rid for r in sched.dropped) == [90, 91, 92]
+    assert eng.n_free == eng.slots               # nothing leaked
+    s = summarize(done, dropped=len(sched.dropped))
+    assert s["n_requests"] == 3 and s["n_dropped"] == 3
+
+    # only AdmissionError is shed: a bare ValueError out of admit is an
+    # engine/registry invariant violation and must abort the replay
+    class Broken:
+        slots, n_free, n_active = 1, 1, 0
+
+        def start_clock(self, t):
+            pass
+
+        def can_admit(self, req):
+            return True
+
+        def admit(self, req):
+            raise ValueError("registry handed back a bad slot")
+
+    broken = Scheduler(Broken())
+    with pytest.raises(ValueError, match="bad slot"):
+        broken.run([Request(rid=0, tenant_id=0,
+                            prompt=np.zeros(2, np.int32),
+                            max_new_tokens=1)],
+                   clock=lambda: float("inf"))
+    assert not broken.dropped
 
 
 def test_poisson_zipf_workload_is_deterministic_and_in_range():
