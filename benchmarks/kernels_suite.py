@@ -20,6 +20,11 @@ numbers.
 
 The suite FAILS (SystemExit) if any registered (op, backend) pair ends
 up without a bench entry — CI runs it at ``--shapes tiny`` as a smoke.
+
+A second axis sweeps ``n_blocks`` (NSWEEP) for the GEMM-fused and merge
+ops: the factored (n, db) hyperplane banks make both reflect and merge
+cost independent of the number of diagonal blocks, so the recorded
+speed-vs-n curve is ~flat — see ``nblocks_sweep`` in the payload.
 """
 
 from __future__ import annotations
@@ -46,13 +51,26 @@ TINY_SHAPES = {
 N_BLOCKS = 32          # db = d / 32 — the paper's LLaMA default
 BANK_TENANTS = 64      # resident adapters for the batched ops
 
+# n_blocks sweep axis: the factored (n, db) bank makes reflect/merge
+# cost O(t·d) / O(d·f) independent of n — the measured curve should be
+# ~flat, and that flatness is itself the tracked finding (the paper's
+# block-diagonal FLOP savings are realized algebraically, not by
+# launching n small GEMMs).  Swept at one decode cell + the merge cell.
+NSWEEP_OPS = ("householder_gemm", "etherplus_gemm",
+              "householder_gemm_batched", "ether_merge")
+NSWEEP = {
+    "serving": dict(cell=dict(batch=32, tokens=1, d=4096),
+                    n=(1, 8, 32, 128)),
+    "tiny": dict(cell=dict(batch=4, tokens=1, d=256), n=(1, 8, 32)),
+}
 
-def _args_for(op: str, shape: dict):
+
+def _args_for(op: str, shape: dict, n_blocks: int | None = None):
     """Build operands for one op at one serving shape (f = d)."""
     import zlib
     k = jax.random.PRNGKey(zlib.crc32(op.encode()) % (2 ** 31))
     d = shape["d"]
-    n = min(N_BLOCKS, d)
+    n = min(n_blocks or N_BLOCKS, d)
     db = d // n
     b, s = shape["batch"], shape["tokens"]
     t = b * s
@@ -113,6 +131,49 @@ def _flops(op: str, shape: dict) -> int:
     return 0
 
 
+def _nblocks_sweep(shapes: str, on_tpu: bool,
+                   iters: int | None) -> list[dict]:
+    """Time NSWEEP_OPS across the n_blocks axis (rows keyed by
+    ``what="nblocksN"`` + ``shape.n_blocks``).  Off-TPU only the jnp
+    backend is swept — interpret-mode pallas times the emulator, and
+    its per-n numbers would drown the real (flat) curve in noise."""
+    spec = NSWEEP[shapes if shapes in NSWEEP else "tiny"]
+    cell = spec["cell"]
+    entries = []
+    for op in NSWEEP_OPS:
+        backends = [b for b in sorted(execute.available(op))
+                    if b != "pallas" or on_tpu]
+        kind = "merge" if op in _MERGE_OPS else "decode"
+        for n in spec["n"]:
+            if n > cell["d"]:
+                continue
+            args = _args_for(op, cell, n_blocks=n)
+            for backend in backends:
+                fn = jax.jit(lambda *a, _op=op, _be=backend:
+                             execute.dispatch(_op, _be, *a))
+                us = time_us(fn, *args, iters=iters or 10, warmup=2,
+                             reps=1 if iters else 3)
+                entries.append(dict(
+                    op=op, backend=backend, kind=kind,
+                    what=f"nblocks{n}",
+                    mode="compiled" if backend == "pallas" else "xla",
+                    shape=dict(cell, n_blocks=n), us_per_call=round(us, 2),
+                    gflops=round(_flops(op, cell) / max(us, 1e-9) / 1e3, 2),
+                ))
+    return entries
+
+
+def _nblocks_curve(entries: list[dict]) -> dict:
+    """speed-vs-n summary per (op, backend): {n_blocks: µs/call}."""
+    curve: dict = {}
+    for e in entries:
+        if str(e.get("what", "")).startswith("nblocks"):
+            key = f"{e['op']}/{e['backend']}"
+            curve.setdefault(key, {})[str(e["shape"]["n_blocks"])] = \
+                e["us_per_call"]
+    return curve
+
+
 def run_suite(shapes: str = "serving", include_interp: bool = False,
               iters: int | None = None) -> dict:
     """Time every registered (op, backend) pair; returns the JSON payload.
@@ -159,6 +220,7 @@ def run_suite(shapes: str = "serving", include_interp: bool = False,
     if missing:
         raise SystemExit(f"kernel bench suite is missing entries for "
                          f"registered ops: {missing}")
+    entries += _nblocks_sweep(shapes, on_tpu, iters)
     return dict(
         suite="kernels", shapes=shapes, platform=jax.default_backend(),
         jax=jax.__version__, n_blocks=N_BLOCKS, bank_tenants=BANK_TENANTS,
@@ -166,6 +228,12 @@ def run_suite(shapes: str = "serving", include_interp: bool = False,
               "shape only unless --include-interp); jnp rows are the "
               "CPU-comparable numbers"),
         history=_history(entries),
+        nblocks_sweep=dict(
+            note=("factored (n, db) banks: reflect/merge cost is "
+                  "independent of n_blocks, so the curve is ~flat — "
+                  "the block-diagonal savings are algebraic, the "
+                  "kernels never materialize the (d, d) reflection"),
+            curve=_nblocks_curve(entries)),
         entries=entries,
     )
 
@@ -189,7 +257,9 @@ def _history(entries) -> dict:
 def run(include_interp: bool = False):
     """benchmarks.run module protocol: CSV-row dicts (tiny shapes)."""
     payload = run_suite(shapes="tiny", include_interp=include_interp)
-    return [dict(name=f"kernels/{e['op']}/{e['backend']}/{e['kind']}",
+    return [dict(name="/".join(filter(None, ("kernels", e["op"],
+                                             e["backend"], e["kind"],
+                                             e.get("what", "")))),
                  us_per_call=e["us_per_call"],
                  derived=f"{e['mode']} d={e['shape']['d']}")
             for e in payload["entries"]]

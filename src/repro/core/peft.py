@@ -57,7 +57,10 @@ def _insert(tree: dict, path: str, value) -> None:
 def init_adapters(rng: jax.Array, params: Params, cfg: PEFTConfig) -> Params:
     """Adapter tree mirroring ``params``: at each targeted ``<mod>/kernel``
     the adapter dict lives at ``<mod>`` (sibling of the kernel)."""
-    if cfg.method == "full":
+    if cfg is None or cfg.method == "full":
+        # None ≡ no PEFT (the meaning it has at every other entry
+        # point, e.g. train_loss) — callers comparing against the
+        # full-finetune baseline pass it straight through
         return {}
     adapters: Params = {}
     targets = [(p, l) for p, l in flatten_with_paths(params)
@@ -281,6 +284,89 @@ def _bank_unflatten(aux, children):
 # other adapter tree.
 jax.tree_util.register_pytree_node(AdapterBank, _bank_flatten,
                                    _bank_unflatten)
+
+
+class MergedCache:
+    """Fixed-capacity device cache of fully-merged per-tenant weights —
+    the *hot tier* of the registry's two-tier serving policy (DESIGN.md
+    §11), pytree sibling of :class:`AdapterBank`.
+
+    Each entry is a full parameter tree with the tenant's reflection
+    absorbed into the targeted kernels (:func:`merge_params`), so a hot
+    tenant decodes with ZERO per-token adapter work.  ``merge_params``
+    shallow-copies the base tree and replaces only targeted kernels, so
+    every untargeted leaf (embeddings, norms, ...) is the *same* device
+    buffer as the base params — the per-entry HBM cost is the targeted
+    kernels only (:meth:`size_bytes`).
+
+    All mutation is functional (``put``/``drop`` return a new cache, the
+    old one untouched), matching :meth:`AdapterBank.replace_slot`'s swap
+    discipline; dropping an entry releases the only strong references to
+    its merged kernels, so eviction frees device memory immediately.
+    Entries are whole trees handed to the jitted merged decode step as
+    arguments — every entry shares leaf shapes/dtypes with the base
+    params, so swapping which tenant is served never retraces.
+    """
+
+    def __init__(self, entries: tuple, capacity: int):
+        if len(entries) != capacity:
+            raise ValueError(f"{len(entries)} entries != capacity "
+                             f"{capacity}")
+        self.entries = tuple(entries)
+        self.capacity = capacity
+
+    @classmethod
+    def empty(cls, capacity: int) -> "MergedCache":
+        if capacity < 0:
+            raise ValueError("capacity must be >= 0")
+        return cls((None,) * capacity, capacity)
+
+    def _check(self, slot: int) -> None:
+        if not 0 <= slot < self.capacity:
+            raise ValueError(f"merged slot {slot} out of range "
+                             f"[0, {self.capacity})")
+
+    def put(self, slot: int, tree: Params) -> "MergedCache":
+        """New cache with ``tree`` (a full merged param tree) at
+        ``slot``; the original cache is untouched."""
+        self._check(slot)
+        entries = list(self.entries)
+        entries[slot] = tree
+        return MergedCache(tuple(entries), self.capacity)
+
+    def drop(self, slot: int) -> "MergedCache":
+        """New cache with ``slot`` freed (eviction/demotion)."""
+        self._check(slot)
+        entries = list(self.entries)
+        entries[slot] = None
+        return MergedCache(tuple(entries), self.capacity)
+
+    def get(self, slot: int) -> Optional[Params]:
+        self._check(slot)
+        return self.entries[slot]
+
+    def size_bytes(self, base_params: Optional[Params] = None) -> int:
+        """HBM footprint of the cache.  With ``base_params`` given,
+        leaves shared with the base tree (untargeted modules — same
+        device buffer, not a copy) are excluded."""
+        base_ids = {id(l) for l in
+                    jax.tree_util.tree_leaves(base_params or {})}
+        return sum(l.size * l.dtype.itemsize
+                   for e in self.entries if e is not None
+                   for l in jax.tree_util.tree_leaves(e)
+                   if id(l) not in base_ids)
+
+
+def _merged_flatten(cache: MergedCache):
+    return (cache.entries,), (cache.capacity,)
+
+
+def _merged_unflatten(aux, children):
+    return MergedCache(tuple(children[0]), aux[0])
+
+
+jax.tree_util.register_pytree_node(MergedCache, _merged_flatten,
+                                   _merged_unflatten)
 
 
 def _module(tree: Params, path: str) -> Params:

@@ -31,7 +31,11 @@ slots and retired as they finish — with zero recompiles after warmup,
 asserted via the engine's jit-cache-miss counter.  Reports throughput,
 p50/p95 per-token latency, time-to-first-token, registry churn, and
 admission-rejected (dropped) requests — one malformed request in a
-trace is counted and shed, never a replay abort.
+trace is counted and shed, never a replay abort.  With
+``--merged-capacity N`` the registry runs the two-tier policy
+(DESIGN.md §11): hot tenants are promoted into an N-entry merged-weight
+cache and served reflection-free; the report adds the hot-tier token
+hit rate, promotion/demotion/eviction counts, and merge time.
 
 All four decoder families serve through the engine: attention models
 via causal pad masking, Mamba-2 (``--arch mamba2-1.3b``) and
@@ -127,14 +131,17 @@ def run_trace(args, cfg, peft, params, rng):
     buckets = tuple(int(b) for b in args.prompt_buckets.split(","))
 
     registry = AdapterRegistry(params, peft, capacity, n_tenants=distinct,
-                               rng=jax.random.fold_in(rng, 1))
+                               rng=jax.random.fold_in(rng, 1),
+                               merged_capacity=args.merged_capacity)
     engine = ServeEngine(cfg, params, registry, peft, slots=args.slots,
                          prompt_buckets=buckets,
                          max_new_tokens=args.gen)
     kb = registry.bank.size_bytes() / 1e3
+    tier = (f", merged tier {args.merged_capacity} tenants"
+            if args.merged_capacity else "")
     print(f"serve engine [{args.method}/{args.backend}]: {args.slots} "
-          f"slots, bank capacity {capacity} tenants = {kb:.1f} KB HBM, "
-          f"universe {distinct} tenants, buckets {buckets}, "
+          f"slots, bank capacity {capacity} tenants = {kb:.1f} KB HBM"
+          f"{tier}, universe {distinct} tenants, buckets {buckets}, "
           f"max_len {engine.max_len}")
 
     t0 = time.perf_counter()
@@ -176,6 +183,18 @@ def run_trace(args, cfg, peft, params, rng):
     print(f"registry churn: {r['hits']} hits, {r['misses']} onboards "
           f"({r['evictions']} evictions), "
           f"{r['swap_s'] / max(r['swaps'], 1) * 1e3:.2f} ms/swap")
+    if registry.merged_capacity:
+        t = engine.tier_stats
+        total = t["merged_tokens"] + t["bank_tokens"]
+        print(f"merged tier: {t['merged_tokens']}/{total} tokens "
+              f"({t['merged_tokens'] / max(total, 1) * 100:.1f}% hot-tier "
+              f"hit rate), {r['promotions']} promotions / "
+              f"{r['demotions']} demotions / "
+              f"{r['merged_evictions']} merged evictions "
+              f"({r['merges_skipped']} skipped), "
+              f"{r['merge_s'] * 1e3:.2f} ms merging, "
+              f"{sched.stats['affinity_admissions']} affinity admissions, "
+              f"{registry.merged_size_bytes() / 1e3:.1f} KB merged HBM")
     print(f"jit cache misses after warmup: 0 "
           f"(counters: {engine.jit_cache_misses()})")
 
@@ -214,6 +233,10 @@ def main():
                          "arrive at t=0)")
     ap.add_argument("--zipf-a", type=float, default=0.8,
                     help="Zipf exponent of the tenant popularity")
+    ap.add_argument("--merged-capacity", type=int, default=0,
+                    help="hot-tier merged-weight cache entries (0 = "
+                         "tierless; hot tenants get their reflection "
+                         "absorbed into cached merged weights)")
     ap.add_argument("--prompt-buckets", default="16,32",
                     help="comma-separated prompt pad buckets")
     args = ap.parse_args()

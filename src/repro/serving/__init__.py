@@ -1,12 +1,17 @@
 """Continuous-batching multi-tenant serving subsystem (DESIGN.md §9).
 
-``registry``  — host tenant store + fixed-capacity device AdapterBank
+``registry``  — host tenant store + fixed-capacity device AdapterBank +
+                the merged-weight hot tier (merge-on-promotion, §11)
 ``engine``    — jit-stable slotted decode engine (prefill-into-slot,
-                fused batched decode step, retrace counters)
-``scheduler`` — FCFS admission, slot allocation, Poisson/Zipf workloads
+                fused batched decode step + merged-tier step variant,
+                retrace counters)
+``scheduler`` — FCFS admission with tier-affinity lookahead, slot
+                allocation, Poisson/Zipf workloads
+``oracle``    — tier-faithful one-shot engine-vs-oracle equivalence
 """
 
 from repro.serving.engine import ServeEngine
+from repro.serving.oracle import oracle_tokens
 from repro.serving.registry import AdapterRegistry
 from repro.serving.scheduler import (AdmissionError, FCFSQueue, Request,
                                      Scheduler, SlotAllocator, summarize,
@@ -14,4 +19,4 @@ from repro.serving.scheduler import (AdmissionError, FCFSQueue, Request,
 
 __all__ = ["ServeEngine", "AdapterRegistry", "AdmissionError", "FCFSQueue",
            "Request", "Scheduler", "SlotAllocator", "summarize",
-           "synthetic_workload"]
+           "synthetic_workload", "oracle_tokens"]

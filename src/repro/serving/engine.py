@@ -12,7 +12,7 @@ shapes.  Admission overwrites a slot's cache row wholesale (functional
 zero-reset by construction: the prefilled B=1 row replaces every leaf),
 so retired slots never leak state into the next request.
 
-Exactly two jitted entry points touch the device:
+Three jitted entry points touch the device:
 
 * ``prefill_into_slot`` (one compile per prompt pad bucket): run the
   padded prompt at batch 1, gather the last *real* token's logits
@@ -27,6 +27,15 @@ Exactly two jitted entry points touch the device:
   and the fused single-step ssd/rglru recurrences, argmax sampling,
   cursor/remaining/active updates.  Sampling lives inside the jit so
   measured step time is device work.
+* ``decode_step_merged`` (one compile, ever): the *hot-tier* variant of
+  the fused step (DESIGN.md §11) — same slot bookkeeping, but the
+  weights are one hot tenant's fully-merged tree from the registry's
+  :class:`~repro.core.peft.MergedCache` and NO adapter ops run.  Every
+  merged tree shares the base params' leaf shapes, so which tenant it
+  serves is a host-side argument pick, never a retrace.  :meth:`step`
+  selects it whenever all active slots belong to a single merged-ready
+  tenant; any mixed-tier batch runs the bank step (hot tenants stay
+  bank-resident, so mixing is always correct).
 
 Admission and retirement are therefore pure data: a new request writes
 one cache row + four slot scalars (traced indices — no shape changes),
@@ -112,9 +121,13 @@ class ServeEngine:
         self._origin = time.perf_counter()
         self._state = self._fresh_state()
         self._step_fn = self._jit("decode_step", self._step_impl)
+        self._merged_step_fn = self._jit("decode_step_merged",
+                                         self._merged_step_impl)
         self._prefill_fns = {
             b: self._jit(f"prefill_p{b}", self._make_prefill(b))
             for b in self.prompt_buckets}
+        self.tier_stats = dict(bank_steps=0, merged_steps=0,
+                               bank_tokens=0, merged_tokens=0)
 
     # -- jit bookkeeping ----------------------------------------------
 
@@ -132,6 +145,9 @@ class ServeEngine:
         if include_registry:
             out["registry_swap"] = self.registry.stats.get("swap_traces", 0)
             out["registry_init"] = self.registry.stats.get("init_traces", 0)
+            if getattr(self.registry, "merged_capacity", 0) > 0:
+                out["registry_merge"] = self.registry.stats.get(
+                    "merge_traces", 0)
         return out
 
     def _now(self) -> float:
@@ -161,6 +177,26 @@ class ServeEngine:
         logits, new_cache = api.decode_step(
             params, bank, cache, state["tok"], self.cfg, self.peft,
             tenant_ids=state["tenant"])
+        return self._advance(state, logits, new_cache)
+
+    def _merged_step_impl(self, merged_params, state):
+        """Hot-tier decode step: every active slot belongs to ONE hot
+        tenant whose reflection is already absorbed into
+        ``merged_params`` (registry merged cache), so the step runs the
+        plain backbone — zero per-token adapter work.  All merged trees
+        share the base params' leaf shapes/dtypes, so this compiles once
+        at warmup and serves ANY hot tenant without retracing; which
+        tier (and which tenant's tree) runs is a host-side pick in
+        :meth:`step` over host-known tier state, never a traced branch."""
+        cache = state["cache"]
+        logits, new_cache = api.decode_step(
+            merged_params, None, cache, state["tok"], self.cfg, None,
+            tenant_ids=None)
+        return self._advance(state, logits, new_cache)
+
+    def _advance(self, state, logits, new_cache):
+        """Shared slot bookkeeping for both step tiers (traced)."""
+        cache = state["cache"]
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         active = state["active"]
         # inactive slots keep their cursor (their garbage KV write lands
@@ -291,28 +327,66 @@ class ServeEngine:
         req.admit_s = t0
         req.first_token_s = self._now()
         req.tokens.append(first)
+        # prefill (and its first token) always runs the bank tier: hot
+        # tenants are bank-resident too, and per-bucket merged prefill
+        # variants would multiply compiles for a non-steady-state cost
+        req.tiers.append("bank")
         self._requests[slot] = req
         if req.done:
             return [self._retire(slot)]
         return []
 
     def step(self) -> list[Request]:
-        """One batched decode step; returns requests that finished."""
+        """One batched decode step; returns requests that finished.
+
+        Tier pick (host-side, zero retraces): when every active slot
+        belongs to ONE tenant whose merged entry is ready, the step runs
+        the hot-tier merged weights (no adapter ops); any mixed-tenant
+        batch — hot tenants included, they stay bank-resident — runs the
+        bank step, bitwise identical to a tierless engine.  Each token
+        records which tier produced it (``req.tiers``) so the oracle can
+        replay the exact schedule (merged vs reflect-then-GEMM differ in
+        rounding)."""
         if not self._requests:
             return []
+        tids = {r.tenant_id for r in self._requests.values()}
+        merged = (self.registry.merged_for(next(iter(tids)))
+                  if len(tids) == 1 else None)
         t0 = time.perf_counter()
-        state, nxt = self._step_fn(self.params, self.registry.bank,
-                                   self._state)
+        if merged is not None:
+            tier = "merged"
+            state, nxt = self._merged_step_fn(merged, self._state)
+        else:
+            tier = "bank"
+            state, nxt = self._step_fn(self.params, self.registry.bank,
+                                       self._state)
         toks = np.asarray(nxt)                         # device sync
         dt = time.perf_counter() - t0
         self._state = state
+        self.tier_stats[f"{tier}_steps"] += 1
+        self.tier_stats[f"{tier}_tokens"] += len(self._requests)
         finished = []
         for slot, req in list(self._requests.items()):
             req.tokens.append(int(toks[slot]))
+            req.tiers.append(tier)
             req.step_s.append(dt)
             if req.done:
                 finished.append(self._retire(slot))
         return finished
+
+    def preferred_tenant(self) -> Optional[int]:
+        """Affinity hint for the scheduler: the most common hot-tier
+        tenant among in-flight requests, else None.  Filling free slots
+        with this tenant's queued requests converges the batch onto a
+        single hot tenant, unlocking merged-tier steps — without it, a
+        continuously-refilled mixed batch almost never collapses to one
+        tenant and the merged cache sits idle."""
+        counts: dict[int, int] = {}
+        for r in self._requests.values():
+            t = r.tenant_id
+            if self.registry.is_merged(t):
+                counts[t] = counts.get(t, 0) + 1
+        return max(counts, key=lambda t: counts[t]) if counts else None
 
     def _retire(self, slot: int) -> Request:
         """Pure host bookkeeping: free the slot, unpin the tenant.  No
@@ -336,11 +410,16 @@ class ServeEngine:
                 self.params, self.registry.bank, scratch, tokens,
                 int(1), int(0), int(0), int(2))
         state, _ = self._step_fn(self.params, self.registry.bank, state)
-        jax.block_until_ready(state["tok"])
+        # the merged-tier step: base params share every leaf shape/dtype
+        # with a merged tree, so this one compile covers every future
+        # hot tenant — promotions/demotions mid-trace never retrace
+        state2, _ = self._merged_step_fn(self.params, state)
+        jax.block_until_ready(state2["tok"])
         tree = self.registry.adapters_for(0)           # warms init_fn
         discarded = self.registry._swap(self.registry.bank, tree,
                                         jnp.int32(0))
         jax.block_until_ready(jax.tree_util.tree_leaves(discarded.tree)[0])
+        self.registry.warm_merge()                     # warms _merge
         self._state = self._fresh_state()
         return self.jit_cache_misses()
 

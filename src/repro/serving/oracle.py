@@ -1,0 +1,56 @@
+"""Tier-faithful one-shot oracle for engine-vs-oracle equivalence.
+
+The engine's bank tier (gather-and-reflect) and merged tier (reflection
+absorbed into the weights) are the same algebra but different float
+evaluation orders, so their logits — and occasionally their argmax
+tokens — differ in rounding.  Token-for-token equivalence checks must
+therefore replay the request's *recorded tier schedule*
+(``Request.tiers``, one entry per token): prefill + bank steps run
+against a single-tenant bank, merged steps against the registry's
+jitted kernel-backed merge of the same tenant (deterministic, so the
+oracle recomputes bitwise the tree the engine served even after the
+entry was demoted/evicted).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.peft import AdapterBank
+
+Params = dict[str, Any]
+
+
+def oracle_tokens(cfg, peft, params: Params, registry, req) -> list[int]:
+    """Re-generate a completed request one-shot (batch 1), following its
+    recorded tier schedule; returns the token list the engine must have
+    produced."""
+    from repro.launch.serve import make_serving_fns
+
+    if not req.tiers or req.tiers[0] != "bank":
+        raise ValueError(f"request {req.rid} has no recorded tier "
+                         f"schedule (tiers={req.tiers!r}) — replay it "
+                         f"through the engine first")
+    gen = len(req.tokens) - 1
+    bank1 = AdapterBank.stack([registry.adapters_for(req.tenant_id)],
+                              params, peft)
+    ids0 = jnp.zeros((1,), jnp.int32)
+    pf, st = make_serving_fns(cfg, peft, gen)
+    batch = {"tokens": jnp.asarray(np.asarray(req.prompt))[None]}
+    cache, tok = pf(params, bank1, batch, ids0)
+    toks = [int(tok[0, 0])]
+    merged = None
+    st_m = None
+    for tier in req.tiers[1:]:
+        if tier == "merged":
+            if merged is None:
+                merged = registry.merge_tree(req.tenant_id)
+                _, st_m = make_serving_fns(cfg, None, gen)
+            tok, cache = st_m(merged, None, cache, tok, None)
+        else:
+            tok, cache = st(params, bank1, cache, tok, ids0)
+        toks.append(int(tok[0, 0]))
+    return toks

@@ -18,19 +18,33 @@ functions:
 Unmapped (zero) bank rows are identity adapters — ETHER's ``u = 0``
 normalizes to a zero hyperplane, so even a stray gather of a free slot
 serves the *base* model rather than another tenant's weights.
+
+Two-tier serving (DESIGN.md §11): on top of the bank, the registry can
+run a fixed-capacity :class:`~repro.core.peft.MergedCache` of fully
+*merged* per-tenant weights — the hot tier.  Promotion/demotion is
+driven by the request stream (windowed frequency with hysteresis +
+minimum dwell so borderline tenants don't thrash merge work, LRU
+eviction under capacity pressure, pinned tenants protected in BOTH
+tiers).  Promotion runs the kernel-backed ``ether_merge`` /
+``etherplus_merge`` ops through one jitted merge compiled exactly once
+(``merge_traces``), dispatched asynchronously so in-flight decode never
+blocks on a merge: the hot tier only starts serving an entry once its
+device buffers report ready.  Hot tenants stay bank-resident too — the
+merged tier is a pure fast path, never the only copy.
 """
 
 from __future__ import annotations
 
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.peft import (AdapterBank, init_adapter_bank, init_adapters,
+from repro.core.peft import (AdapterBank, MergedCache, init_adapter_bank,
+                             init_adapters, merge_params,
                              validate_tenant_ids)
 from repro.core.transforms import PEFTConfig
 
@@ -43,15 +57,28 @@ class AdapterRegistry:
     def __init__(self, params: Params, peft: PEFTConfig, capacity: int, *,
                  n_tenants: Optional[int] = None,
                  rng: Optional[jax.Array] = None,
-                 init_fn: Optional[Callable[[int], Params]] = None):
+                 init_fn: Optional[Callable[[int], Params]] = None,
+                 merged_capacity: int = 0, promote_after: int = 3,
+                 demote_below: int = 1, window: int = 32,
+                 min_dwell: int = 16):
         if peft.method not in AdapterBank.BANK_METHODS:
             raise ValueError(f"registry serves {AdapterBank.BANK_METHODS} "
                              f"banks only (got {peft.method!r})")
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
+        if merged_capacity < 0:
+            raise ValueError("merged_capacity must be >= 0")
+        if not 0 <= demote_below < promote_after:
+            # hysteresis band: a tenant must cool strictly below
+            # demote_below (< promote_after) before its merge is
+            # discarded, else oscillation at the boundary would re-merge
+            # every swing
+            raise ValueError(f"need 0 <= demote_below < promote_after "
+                             f"(got {demote_below} / {promote_after})")
         self.capacity = capacity
         self.n_tenants = n_tenants          # universe size; None = open
         self._rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self._params, self._peft = params, peft
         seed = init_adapter_bank(self._rng, params, peft, 1)
         zeroed = jax.tree_util.tree_map(jnp.zeros_like, seed.tree)
         self.bank = AdapterBank(zeroed, 1,
@@ -63,8 +90,25 @@ class AdapterRegistry:
         self._lru: OrderedDict[int, None] = OrderedDict()
         self._free = list(range(capacity))
         self._pins: dict[int, int] = {}
+        # -- hot tier: merged-weight cache + frequency/LRU policy ------
+        self.merged_capacity = merged_capacity
+        self.promote_after = promote_after
+        self.demote_below = demote_below
+        self.window = window
+        self.min_dwell = min_dwell
+        self.merged = MergedCache.empty(merged_capacity)
+        self._mslot_of: dict[int, int] = {}
+        self._mfree = list(range(merged_capacity))
+        self._mlru: OrderedDict[int, None] = OrderedDict()
+        self._mwindow: deque[int] = deque()   # last `window` request tids
+        self._mcounts: dict[int, int] = {}    # tid -> count in window
+        self._promoted_at: dict[int, int] = {}  # tid -> request ordinal
+        self._merge_t0: dict[int, float] = {}   # pending-ready merges
+        self._requests_seen = 0
         self.stats = dict(hits=0, misses=0, evictions=0, swaps=0,
-                          swap_s=0.0, swap_traces=0, init_traces=0)
+                          swap_s=0.0, swap_traces=0, init_traces=0,
+                          promotions=0, demotions=0, merged_evictions=0,
+                          merges_skipped=0, merge_s=0.0, merge_traces=0)
 
         def _swap_impl(bank, tree, slot):
             # traced body: runs only on a jit cache miss, so this count
@@ -73,6 +117,16 @@ class AdapterRegistry:
             return bank.replace_slot(slot, tree)
 
         self._swap = jax.jit(_swap_impl)
+
+        def _merge_impl(base, tree):
+            # same trace-counting discipline as _swap: adapter trees
+            # share shapes across tenants, so every promotion after the
+            # first is a jit cache hit — the merge ops are charged once
+            # per promotion, the compile once ever
+            self.stats["merge_traces"] += 1
+            return merge_params(base, tree, peft)
+
+        self._merge = jax.jit(_merge_impl)
 
     def _default_init(self, params, peft):
         """Deterministic per-tenant synthetic adapters: one jitted init
@@ -146,6 +200,7 @@ class AdapterRegistry:
         self._lru[tid] = None
         self._lru.move_to_end(tid)
         self._pins[tid] = self._pins.get(tid, 0) + 1
+        self._note_request(tid)
         return slot
 
     def release(self, tenant_id: int) -> None:
@@ -178,7 +233,145 @@ class AdapterRegistry:
         self.stats["swaps"] += 1
         self.stats["swap_s"] += time.perf_counter() - t0
 
+    # -- hot tier: merge-on-promotion ---------------------------------
+
+    def _note_request(self, tid: int) -> None:
+        """Advance the windowed-frequency policy by one admitted request
+        and apply promotions/demotions.  Host-side bookkeeping only —
+        the merge itself is dispatched asynchronously, so this never
+        blocks in-flight decode."""
+        self._requests_seen += 1
+        if self.merged_capacity == 0:
+            return
+        self._mwindow.append(tid)
+        self._mcounts[tid] = self._mcounts.get(tid, 0) + 1
+        if len(self._mwindow) > self.window:
+            old = self._mwindow.popleft()
+            left = self._mcounts.get(old, 1) - 1
+            if left:
+                self._mcounts[old] = left
+            else:
+                self._mcounts.pop(old, None)
+        if (tid not in self._mslot_of
+                and self._mcounts[tid] >= self.promote_after):
+            self.promote(tid)
+        for t in [t for t in self._mslot_of
+                  if self._mcounts.get(t, 0) < self.demote_below]:
+            # hysteresis: only demote after the tenant has been merged
+            # for min_dwell requests AND cooled strictly below the lower
+            # threshold; pinned tenants (in-flight requests) never lose
+            # their merged entry mid-request
+            if (self._requests_seen - self._promoted_at[t] >= self.min_dwell
+                    and self._pins.get(t, 0) == 0):
+                self.demote(t)
+
+    def promote(self, tenant_id: int) -> bool:
+        """Merge ``tenant_id``'s reflection into a full weight tree and
+        install it in the hot tier.  Returns False (and counts
+        ``merges_skipped``) when every merged entry is pinned — a
+        promotion must never abort serving.  The merge runs through the
+        kernel-backed ``*_merge`` ops inside one jitted function
+        (compiled once — ``merge_traces``) and is NOT blocked on: the
+        entry starts serving once its buffers report ready
+        (:meth:`merged_for`)."""
+        tid = int(tenant_id)
+        if self.merged_capacity == 0:
+            raise ValueError("registry has no merged tier "
+                             "(merged_capacity=0)")
+        if tid in self._mslot_of:
+            return True
+        if self._mfree:
+            mslot = self._mfree.pop()
+        else:
+            mslot = self._evict_merged()
+            if mslot is None:
+                self.stats["merges_skipped"] += 1
+                return False
+        t0 = time.perf_counter()
+        self.merged = self.merged.put(mslot, self.merge_tree(tid))
+        self.stats["merge_s"] += time.perf_counter() - t0
+        self.stats["promotions"] += 1
+        self._mslot_of[tid] = mslot
+        self._mlru[tid] = None
+        self._mlru.move_to_end(tid)
+        self._promoted_at[tid] = self._requests_seen
+        self._merge_t0[tid] = t0
+        return True
+
+    def demote(self, tenant_id: int) -> None:
+        """Drop a tenant's merged entry (the tenant keeps serving from
+        the bank tier).  Dropping releases the only strong references to
+        the merged kernels, freeing their device memory."""
+        tid = int(tenant_id)
+        mslot = self._mslot_of.pop(tid)
+        self.merged = self.merged.drop(mslot)
+        self._mfree.append(mslot)
+        self._mlru.pop(tid, None)
+        self._promoted_at.pop(tid, None)
+        self._merge_t0.pop(tid, None)
+        self.stats["demotions"] += 1
+
+    def _evict_merged(self) -> Optional[int]:
+        """Free the least-recently-*served* unpinned merged entry; None
+        when every merged tenant is pinned by in-flight requests."""
+        for tid in self._mlru:                     # least recent first
+            if self._pins.get(tid, 0) == 0:
+                mslot = self._mslot_of.pop(tid)
+                self.merged = self.merged.drop(mslot)
+                del self._mlru[tid]
+                self._promoted_at.pop(tid, None)
+                self._merge_t0.pop(tid, None)
+                self.stats["merged_evictions"] += 1
+                return mslot
+        return None
+
+    def merge_tree(self, tenant_id: int) -> Params:
+        """The tenant's fully-merged weight tree via the jitted
+        kernel-backed merge (deterministic: the tier-faithful oracle
+        recomputes the exact tree the engine served)."""
+        return self._merge(self._params, self.adapters_for(int(tenant_id)))
+
+    def merged_for(self, tenant_id: int) -> Optional[Params]:
+        """The tenant's merged tree iff it is hot AND its (async) merge
+        has completed — while the merge is still materializing the
+        caller keeps serving from the bank, so promotion never stalls
+        decode.  Serving an entry bumps its LRU recency."""
+        tid = int(tenant_id)
+        mslot = self._mslot_of.get(tid)
+        if mslot is None:
+            return None
+        tree = self.merged.get(mslot)
+        if tid in self._merge_t0:
+            leaves = jax.tree_util.tree_leaves(tree)
+            if not all(getattr(l, "is_ready", lambda: True)()
+                       for l in leaves):
+                return None
+            del self._merge_t0[tid]
+        self._mlru.move_to_end(tid)
+        return tree
+
+    def is_merged(self, tenant_id: int) -> bool:
+        return int(tenant_id) in self._mslot_of
+
+    def warm_merge(self) -> None:
+        """Compile the jitted merge on a throwaway tree so the first
+        real promotion is a jit cache hit (``jit_cache_misses`` stays
+        flat across promotions mid-trace)."""
+        if self.merged_capacity == 0:
+            return
+        discard = self.merge_tree(0)
+        jax.block_until_ready(jax.tree_util.tree_leaves(discard)[0])
+
     # -- introspection ------------------------------------------------
+
+    def merged_resident(self) -> dict[int, int]:
+        """tenant id → merged slot for every hot-tier tenant."""
+        return dict(self._mslot_of)
+
+    def merged_size_bytes(self) -> int:
+        """HBM held by the hot tier (targeted kernels only — untargeted
+        leaves are shared with the base params, not copied)."""
+        return self.merged.size_bytes(self._params)
 
     def resident(self) -> dict[int, int]:
         """tenant id → slot for every loaded tenant."""

@@ -52,6 +52,10 @@ class Request:
     slot: Optional[int] = None
     tokens: list = dataclasses.field(default_factory=list)
     step_s: list = dataclasses.field(default_factory=list)  # per-token
+    # which serving tier produced each token ("bank" | "merged"), index-
+    # aligned with ``tokens`` — the tier-faithful oracle replays this
+    # exact schedule (merged vs reflect-then-GEMM differ in rounding)
+    tiers: list = dataclasses.field(default_factory=list)
 
     @property
     def done(self) -> bool:
@@ -71,9 +75,42 @@ class FCFSQueue:
         else:
             self._q.append(req)
 
-    def pop_ready(self, now: float) -> Optional[Request]:
-        if self._q and self._q[0].arrival_s <= now:
-            return self._q.popleft()
+    def pop_ready(self, now: float, prefer: Optional[int] = None,
+                  lookahead: int = 0) -> Optional[Request]:
+        """Pop the first ready request — or, with ``prefer`` set, the
+        first ready request of that tenant within the first
+        ``lookahead`` queued requests (tenant-affinity admission,
+        DESIGN.md §11).  Affinity only pulls a preferred-tenant request
+        *forward*; it never delays the head when no preferred request is
+        ready, and never admits a not-yet-arrived request, so FCFS
+        progress is preserved and the reorder distance is bounded by
+        ``lookahead``."""
+        if not self._q or self._q[0].arrival_s > now:
+            return None
+        if prefer is not None:
+            for i in range(min(lookahead, len(self._q))):
+                req = self._q[i]
+                if req.arrival_s > now:
+                    break
+                if req.tenant_id == prefer:
+                    del self._q[i]
+                    return req
+        return self._q.popleft()
+
+    def peek_hot(self, now: float, is_hot, lookahead: int
+                 ) -> Optional[int]:
+        """Tenant id of the first *ready* request within ``lookahead``
+        whose tenant ``is_hot`` (merged-resident) — used to seed a new
+        pure-tenant run when nothing in flight prefers one (the
+        in-flight plurality signal goes silent the moment a hot
+        tenant's last request retires, which would otherwise scatter
+        the next hot tenant's requests across mixed batches)."""
+        for i in range(min(lookahead, len(self._q))):
+            req = self._q[i]
+            if req.arrival_s > now:
+                return None
+            if is_hot(req.tenant_id):
+                return req.tenant_id
         return None
 
     def requeue(self, req: Request) -> None:
@@ -117,12 +154,26 @@ class Scheduler:
     Invalid requests (see :class:`AdmissionError`) are *counted and
     dropped* at admission (``self.dropped``) instead of killing the
     whole replay: one bad request in a trace must not abort the
-    benchmark run."""
+    benchmark run.
 
-    def __init__(self, engine, *, max_admits_per_tick: Optional[int] = None):
+    Tier-affinity admission (DESIGN.md §11): when the engine reports a
+    *preferred* tenant — the most common hot-tier tenant among in-flight
+    requests — free slots are filled with that tenant's queued requests
+    first (bounded-lookahead reorder, never a delay of the queue head
+    and never an idle slot).  As other slots retire, the batch converges
+    to a single hot tenant and the engine's merged-tier step takes over;
+    with no hot tenants (uniform traffic, or ``merged_capacity=0``)
+    ``preferred_tenant`` is always None and admission is plain FCFS."""
+
+    def __init__(self, engine, *, max_admits_per_tick: Optional[int] = None,
+                 affinity_lookahead: Optional[int] = None):
         self.engine = engine
         self.max_admits = max_admits_per_tick or engine.slots
+        self.affinity_lookahead = (4 * engine.slots
+                                   if affinity_lookahead is None
+                                   else affinity_lookahead)
         self.dropped: list[Request] = []
+        self.stats = dict(affinity_admissions=0)
 
     def run(self, requests, *, clock: Optional[Callable[[], float]] = None
             ) -> list[Request]:
@@ -137,16 +188,34 @@ class Scheduler:
         read it after ``run`` returns and before the next call.
         """
         self.dropped = []
+        self.stats = dict(affinity_admissions=0)
         queue = FCFSQueue(requests)
         t0 = time.perf_counter()
         self.engine.start_clock(t0)    # request timestamps share origin
         now = clock if clock is not None else (
             lambda: time.perf_counter() - t0)
         done: list[Request] = []
+        prefer_fn = getattr(self.engine, "preferred_tenant", lambda: None)
+        is_hot = getattr(getattr(self.engine, "registry", None),
+                         "is_merged", None)
+
+        def prefer():
+            p = prefer_fn()
+            if p is None and is_hot is not None:
+                # no in-flight preference: seed the next pure-tenant
+                # run from the first ready hot tenant in the lookahead
+                p = queue.peek_hot(now(), is_hot,
+                                   self.affinity_lookahead)
+            return p
+
         while len(queue) or self.engine.n_active:
             admitted = 0
-            while (admitted < self.max_admits and self.engine.n_free
-                    and (req := queue.pop_ready(now())) is not None):
+            while admitted < self.max_admits and self.engine.n_free:
+                p = prefer()
+                req = queue.pop_ready(now(), prefer=p,
+                                      lookahead=self.affinity_lookahead)
+                if req is None:
+                    break
                 if not self.engine.can_admit(req):
                     # back-pressure: every resident tenant's bank slot
                     # is pinned by in-flight requests — this (distinct)
@@ -164,6 +233,8 @@ class Scheduler:
                     self.dropped.append(req)
                     continue
                 admitted += 1
+                if p is not None and req.tenant_id == p:
+                    self.stats["affinity_admissions"] += 1
             if self.engine.n_active:
                 done.extend(self.engine.step())
             elif len(queue):
@@ -179,31 +250,53 @@ def synthetic_workload(n_requests: int, n_tenants: int, *, vocab: int,
                        rate_rps: Optional[float] = None, zipf_a: float = 1.1,
                        prompt_lens: tuple[int, int] = (8, 32),
                        gen_lens: tuple[int, int] = (4, 16),
-                       seed: int = 0) -> list[Request]:
+                       seed: int = 0,
+                       hot_permutation: Optional[int] = None,
+                       shift_hot_at: Optional[int] = None) -> list[Request]:
     """Poisson arrivals (``rate_rps`` requests/s; None = all at t=0)
-    over a Zipf(``zipf_a``) tenant distribution — tenant 0 hottest.
+    over a Zipf(``zipf_a``) tenant distribution.
 
     ``rate_rps`` must be positive or None: an explicit 0 (or negative)
     rate is a caller bug, not a request for the all-at-t=0 saturation
     mode, and raises instead of being silently coerced by falsiness.
+
+    By default tenant 0 is the Zipf head (rank == tenant id).
+    ``hot_permutation`` seeds a permutation of the rank→tenant mapping,
+    so the hot set is an arbitrary subset of the universe instead of
+    always {0, 1, ...}; ``shift_hot_at`` re-draws that permutation from
+    request index ``shift_hot_at`` onward (requests are generated in
+    arrival order), moving the hot set mid-trace — the tier-churn case
+    (promotions of the new head, demotions of the old) that a static
+    head can never exercise.
 
     When ``n_tenants`` exceeds the registry capacity the Zipf tail
     guarantees cold tenants arrive mid-traffic and force eviction."""
     if rate_rps is not None and rate_rps <= 0:
         raise ValueError(f"rate_rps must be positive (got {rate_rps}); "
                          f"pass None for all-arrive-at-t=0")
+    if shift_hot_at is not None and not 0 <= shift_hot_at <= n_requests:
+        raise ValueError(f"shift_hot_at {shift_hot_at} outside "
+                         f"[0, {n_requests}]")
     rng = np.random.default_rng(seed)
     ranks = np.arange(1, n_tenants + 1, dtype=np.float64)
     probs = ranks ** -zipf_a
     probs /= probs.sum()
+    perm = np.arange(n_tenants)
+    if hot_permutation is not None:
+        perm = np.random.default_rng(hot_permutation).permutation(n_tenants)
     arrivals = (np.zeros(n_requests) if rate_rps is None else
                 np.cumsum(rng.exponential(1.0 / rate_rps, n_requests)))
     out = []
     for i in range(n_requests):
+        if shift_hot_at is not None and i == shift_hot_at:
+            # independent second permutation (offset seed): the new hot
+            # set is disjoint from the old one w.h.p.
+            perm = np.random.default_rng(
+                (hot_permutation or 0) + 0x51f7).permutation(n_tenants)
         plen = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
         out.append(Request(
             rid=i,
-            tenant_id=int(rng.choice(n_tenants, p=probs)),
+            tenant_id=int(perm[rng.choice(n_tenants, p=probs)]),
             prompt=rng.integers(0, vocab, plen).astype(np.int32),
             max_new_tokens=int(rng.integers(gen_lens[0], gen_lens[1] + 1)),
             arrival_s=float(arrivals[i])))

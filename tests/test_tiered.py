@@ -1,0 +1,386 @@
+"""Two-tier tenant cache: merge-on-promotion policy + tiered serving
+(DESIGN.md §11).
+
+Covers the registry's hot-tier policy as properties (promotion ordering
+by windowed frequency, hysteresis under oscillating traffic, pin
+protection in BOTH tiers, merged-entry eviction actually freeing device
+memory, charged-once kernel-backed merges), and the engine-level
+contracts: tier-faithful engine-vs-oracle token equivalence (merged vs
+reflect-then-GEMM differ in rounding, so the oracle replays the
+recorded tier schedule), logits tolerance across tiers, and zero jit
+retraces across promotions/demotions mid-trace.
+"""
+
+import copy
+import gc
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, peft_targets
+from repro.core import execute
+from repro.core.peft import MergedCache, merge_params
+from repro.core.transforms import PEFTConfig
+from repro.models import api, init_model
+from repro.serving import (AdapterRegistry, Scheduler, ServeEngine,
+                           oracle_tokens, synthetic_workload)
+
+RNG = jax.random.PRNGKey(0)
+
+TINY_W = jax.random.normal(jax.random.fold_in(RNG, 9), (16, 16))
+TINY_PARAMS = {"q_proj": {"kernel": TINY_W}}
+TINY_PEFT = PEFTConfig(method="ether", n_blocks=4, targets="q_proj")
+
+
+def tiered_registry(capacity=4, merged_capacity=2, *, promote_after=3,
+                    demote_below=1, window=8, min_dwell=4, n_tenants=None):
+    return AdapterRegistry(TINY_PARAMS, TINY_PEFT, capacity,
+                           n_tenants=n_tenants, rng=RNG,
+                           merged_capacity=merged_capacity,
+                           promote_after=promote_after,
+                           demote_below=demote_below, window=window,
+                           min_dwell=min_dwell)
+
+
+def pump(reg, tid, n=1):
+    """n admitted-and-retired requests for one tenant."""
+    for _ in range(n):
+        reg.acquire(tid)
+        reg.release(tid)
+
+
+def wait_merged(reg, tid, tries=200):
+    """Poll until the tenant's async merge is ready (merged_for serves
+    None while it is in flight — by design decode never blocks on it)."""
+    for _ in range(tries):
+        tree = reg.merged_for(tid)
+        if tree is not None:
+            return tree
+        time.sleep(0.005)
+    raise AssertionError(f"merge for tenant {tid} never became ready")
+
+
+# ---------------------------------------------------------------------------
+# MergedCache container
+# ---------------------------------------------------------------------------
+
+def test_merged_cache_functional_put_drop():
+    cache = MergedCache.empty(2)
+    tree = merge_params(TINY_PARAMS, reg_adapters(0), TINY_PEFT)
+    c2 = cache.put(1, tree)
+    assert cache.get(1) is None            # original untouched
+    assert c2.get(1) is tree and c2.get(0) is None
+    c3 = c2.drop(1)
+    assert c3.get(1) is None and c2.get(1) is tree
+    with pytest.raises(ValueError):
+        c2.get(2)
+    with pytest.raises(ValueError):
+        MergedCache.empty(-1)
+
+
+def reg_adapters(tid):
+    from repro.core.peft import init_adapters
+    return init_adapters(jax.random.fold_in(RNG, 100 + tid), TINY_PARAMS,
+                         TINY_PEFT)
+
+
+def test_merged_cache_size_counts_only_unshared_leaves():
+    tree = merge_params(TINY_PARAMS, reg_adapters(0), TINY_PEFT)
+    cache = MergedCache.empty(1).put(0, tree)
+    # only the merged q_proj kernel is new; a hypothetical untargeted
+    # leaf would be the same buffer as the base and excluded
+    assert cache.size_bytes(TINY_PARAMS) == TINY_W.size * 4
+    assert cache.size_bytes() == cache.size_bytes(None)
+
+
+def test_merged_cache_is_pytree():
+    tree = merge_params(TINY_PARAMS, reg_adapters(0), TINY_PEFT)
+    cache = MergedCache.empty(2).put(0, tree)
+    leaves, treedef = jax.tree_util.tree_flatten(cache)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(back, MergedCache) and back.capacity == 2
+    np.testing.assert_array_equal(back.get(0)["q_proj"]["kernel"],
+                                  tree["q_proj"]["kernel"])
+
+
+# ---------------------------------------------------------------------------
+# promotion / demotion policy
+# ---------------------------------------------------------------------------
+
+def test_promotion_at_threshold_and_frequency_ordering():
+    reg = tiered_registry(promote_after=3, window=8)
+    pump(reg, 0, 2)
+    assert not reg.is_merged(0)            # below threshold
+    pump(reg, 1, 2)
+    pump(reg, 0, 1)                        # tenant 0 hits 3 first
+    assert reg.is_merged(0) and not reg.is_merged(1)
+    pump(reg, 1, 1)
+    assert reg.is_merged(1)                # then tenant 1
+    assert reg.stats["promotions"] == 2
+    assert sorted(reg.merged_resident()) == [0, 1]
+
+
+def test_promotion_requires_merged_tier():
+    reg = tiered_registry(merged_capacity=0)
+    pump(reg, 0, 10)
+    assert not reg.is_merged(0) and reg.stats["promotions"] == 0
+    with pytest.raises(ValueError, match="merged_capacity"):
+        reg.promote(0)
+
+
+def test_merged_lru_eviction_order():
+    reg = tiered_registry(capacity=6, merged_capacity=2, promote_after=2,
+                          window=12)
+    pump(reg, 0, 2)
+    pump(reg, 1, 2)                        # tier full: {0, 1}
+    assert sorted(reg.merged_resident()) == [0, 1]
+    reg.merged_for(0)                      # serve 0 → 1 is now LRU
+    pump(reg, 2, 2)                        # needs a slot → evicts 1
+    assert sorted(reg.merged_resident()) == [0, 2]
+    assert reg.stats["merged_evictions"] == 1
+
+
+def test_hysteresis_no_thrash_under_oscillating_traffic():
+    """Traffic oscillating between the promote and demote thresholds
+    must merge once, not once per swing."""
+    reg = tiered_registry(capacity=6, merged_capacity=2, promote_after=3,
+                          demote_below=1, window=6, min_dwell=0)
+    pump(reg, 0, 3)
+    assert reg.is_merged(0) and reg.stats["promotions"] == 1
+    # oscillate: tenant 0's windowed count swings across the promote
+    # threshold (2 ↔ 3) but never below the demote threshold, while the
+    # remaining traffic is spread over cold tenants (none of which can
+    # reach promote_after themselves)
+    for i in range(12):
+        pump(reg, 0, 1)
+        pump(reg, 1 + i % 5, 1)
+        assert reg.is_merged(0)            # never demoted mid-swing
+    assert reg.stats["promotions"] == 1    # and never re-merged
+    assert reg.stats["demotions"] == 0
+    assert reg.stats["merged_evictions"] == 0
+
+
+def test_demotion_after_cooldown_and_min_dwell():
+    reg = tiered_registry(capacity=6, merged_capacity=2, promote_after=2,
+                          demote_below=1, window=4, min_dwell=6)
+    pump(reg, 0, 2)
+    assert reg.is_merged(0)
+    for t in (1, 2, 3, 4):                 # 0 falls out of window=4 ...
+        pump(reg, t, 1)                    # (each cold tenant appears once
+    assert reg.is_merged(0)                # per window) but dwell not hit
+    pump(reg, 1, 1)
+    pump(reg, 2, 1)
+    assert not reg.is_merged(0)            # dwell passed, count 0 → out
+    assert reg.stats["demotions"] == 1
+
+
+def test_pin_protection_across_both_tiers():
+    reg = tiered_registry(capacity=2, merged_capacity=1, promote_after=2,
+                          demote_below=1, window=4, min_dwell=0)
+    reg.acquire(0)                         # pinned in-flight
+    pump(reg, 0, 1)
+    assert reg.is_merged(0)
+    # bank tier: pinned tenant never evicted (existing invariant)
+    pump(reg, 1, 1)
+    assert 0 in reg.resident()
+    # merged tier: capacity pressure from a hotter tenant cannot evict
+    # the pinned tenant's merged entry ...
+    pump(reg, 1, 1)
+    assert reg.is_merged(0) and not reg.is_merged(1)
+    assert reg.stats["merges_skipped"] >= 1
+    # ... nor can traffic decay demote it while pinned
+    pump(reg, 1, 4)
+    assert reg.is_merged(0)
+    reg.release(0)
+    pump(reg, 1, 1)                        # unpinned → evictable now
+    assert not reg.is_merged(0) and reg.is_merged(1)
+
+
+def test_merged_eviction_frees_device_memory():
+    reg = tiered_registry(capacity=4, merged_capacity=1, promote_after=2,
+                          window=8, min_dwell=0)
+    # warm cycle: first acquire uploads bank/adapter state that stays
+    # live regardless of the merged tier — snapshot after it settles
+    pump(reg, 0, 2)
+    assert reg.is_merged(0)
+    reg.demote(0)
+    gc.collect()
+    n0 = len(jax.live_arrays())
+    pump(reg, 0, 1)                        # windowed count re-promotes
+    assert reg.is_merged(0)
+    gc.collect()
+    assert len(jax.live_arrays()) > n0     # merged kernels live
+    reg.demote(0)
+    gc.collect()
+    assert len(jax.live_arrays()) == n0    # dropped entry freed them
+
+
+def test_merge_is_kernel_backed_and_charged_once():
+    reg = tiered_registry(capacity=6, merged_capacity=2, promote_after=2,
+                          window=8)
+    execute.reset_counters()
+    pump(reg, 0, 2)                        # first promotion: traces
+    assert reg.is_merged(0)
+    c = execute.counters()
+    assert any(k.startswith("ether_merge") and v > 0
+               for k, v in c.items()), c   # the *_merge op path ran
+    pump(reg, 1, 2)                        # second promotion: cache hit
+    assert reg.is_merged(1)
+    assert execute.counters() == c         # no re-trace, charged once
+    assert reg.stats["merge_traces"] == 1
+    assert reg.stats["promotions"] == 2
+
+
+def test_merged_for_bumps_lru_and_unknown_is_none():
+    reg = tiered_registry(promote_after=2, window=8)
+    assert reg.merged_for(3) is None
+    pump(reg, 3, 2)
+    tree = wait_merged(reg, 3)
+    np.testing.assert_allclose(
+        np.asarray(tree["q_proj"]["kernel"]),
+        np.asarray(merge_params(TINY_PARAMS, reg.adapters_for(3),
+                                TINY_PEFT)["q_proj"]["kernel"]),
+        rtol=1e-4, atol=1e-6)   # jitted vs eager merge: fusion rounding
+
+
+# ---------------------------------------------------------------------------
+# workload: seeded hot-set permutation (tier churn)
+# ---------------------------------------------------------------------------
+
+def head_tenant(reqs):
+    ids, counts = np.unique([r.tenant_id for r in reqs],
+                            return_counts=True)
+    return int(ids[np.argmax(counts)])
+
+
+def test_hot_permutation_moves_the_zipf_head():
+    base = synthetic_workload(200, 16, vocab=64, zipf_a=2.0, seed=1)
+    assert head_tenant(base) == 0          # default: tenant 0 hottest
+    perm = synthetic_workload(200, 16, vocab=64, zipf_a=2.0, seed=1,
+                              hot_permutation=7)
+    assert head_tenant(perm) != 0
+    again = synthetic_workload(200, 16, vocab=64, zipf_a=2.0, seed=1,
+                               hot_permutation=7)
+    assert [r.tenant_id for r in perm] == [r.tenant_id for r in again]
+
+
+def test_shift_hot_at_changes_head_mid_trace():
+    wl = synthetic_workload(400, 16, vocab=64, zipf_a=2.0, seed=1,
+                            hot_permutation=7, shift_hot_at=200)
+    assert head_tenant(wl[:200]) != head_tenant(wl[200:])
+    with pytest.raises(ValueError, match="shift_hot_at"):
+        synthetic_workload(10, 4, vocab=64, shift_hot_at=11)
+
+
+# ---------------------------------------------------------------------------
+# engine: tier-faithful equivalence, logits tolerance, zero retraces
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiered():
+    cfg = get_config("smollm-360m", "smoke")
+    peft = PEFTConfig(method="ether", n_blocks=4,
+                      targets=peft_targets("smollm-360m"))
+    params = init_model(RNG, cfg)
+    registry = AdapterRegistry(params, peft, 6, n_tenants=12,
+                               rng=jax.random.fold_in(RNG, 1),
+                               merged_capacity=3, promote_after=3,
+                               window=16, min_dwell=8)
+    engine = ServeEngine(cfg, params, registry, peft, slots=2,
+                         prompt_buckets=(8,), max_new_tokens=8)
+    snap = engine.warmup()
+    workload = synthetic_workload(24, 12, vocab=cfg.vocab, rate_rps=None,
+                                  zipf_a=2.0, prompt_lens=(4, 8),
+                                  gen_lens=(4, 8), seed=0,
+                                  hot_permutation=5)
+    sched = Scheduler(engine)
+    done = sched.run(copy.deepcopy(workload), clock=lambda: float("inf"))
+    return dict(cfg=cfg, peft=peft, params=params, registry=registry,
+                engine=engine, snap=snap, done=done, sched=sched)
+
+
+def test_tiered_replay_served_both_tiers(tiered):
+    assert not tiered["sched"].dropped
+    ts = tiered["engine"].tier_stats
+    assert ts["merged_steps"] > 0 and ts["bank_steps"] > 0
+    assert tiered["registry"].stats["promotions"] > 0
+    assert tiered["sched"].stats["affinity_admissions"] > 0
+
+
+def test_tiered_replay_zero_retraces(tiered):
+    tiered["engine"].assert_no_retrace(tiered["snap"])
+
+
+def test_engine_matches_tier_faithful_oracle(tiered):
+    mixed = [r for r in tiered["done"] if "merged" in r.tiers]
+    pure = [r for r in tiered["done"] if "merged" not in r.tiers]
+    assert mixed and pure                  # both schedules exercised
+    for req in mixed[:3] + pure[:2]:
+        assert len(req.tiers) == len(req.tokens)
+        assert oracle_tokens(tiered["cfg"], tiered["peft"],
+                             tiered["params"], tiered["registry"],
+                             req) == req.tokens, req.rid
+
+
+def test_logits_tolerance_across_tiers(tiered):
+    """Merged and bank tiers are the same algebra in different float
+    evaluation orders: logits must agree to float32 tolerance."""
+    cfg, peft, params = (tiered[k] for k in ("cfg", "peft", "params"))
+    registry = tiered["registry"]
+    tid = next(iter(registry.merged_resident()))
+    tslot = registry.acquire(tid)
+    merged = registry.merge_tree(tid)
+    tokens = {"tokens": jnp.arange(2 * 8).reshape(2, 8) % cfg.vocab}
+    ids = jnp.full((2,), tslot, jnp.int32)
+    cache, logits_bank = api.prefill(params, registry.bank, tokens, cfg,
+                                     peft, tenant_ids=ids)
+    _, logits_merged = api.prefill(merged, None, tokens, cfg, None)
+    registry.release(tid)
+    np.testing.assert_allclose(np.asarray(logits_bank),
+                               np.asarray(logits_merged),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_retrace_free_across_mid_trace_tier_churn():
+    """Hot set shifts mid-trace → demotions + fresh promotions, with
+    the jit cache-miss counters frozen at their warmup values."""
+    cfg = get_config("smollm-360m", "smoke")
+    peft = PEFTConfig(method="ether", n_blocks=4,
+                      targets=peft_targets("smollm-360m"))
+    params = init_model(RNG, cfg)
+    registry = AdapterRegistry(params, peft, 6, n_tenants=12,
+                               rng=jax.random.fold_in(RNG, 1),
+                               merged_capacity=2, promote_after=3,
+                               demote_below=1, window=8, min_dwell=4)
+    engine = ServeEngine(cfg, params, registry, peft, slots=2,
+                         prompt_buckets=(8,), max_new_tokens=6)
+    snap = engine.warmup()
+    wl = synthetic_workload(36, 12, vocab=cfg.vocab, rate_rps=None,
+                            zipf_a=2.5, prompt_lens=(4, 8),
+                            gen_lens=(3, 6), seed=2, hot_permutation=3,
+                            shift_hot_at=18)
+    sched = Scheduler(engine)
+    done = sched.run(wl, clock=lambda: float("inf"))
+    assert len(done) == 36 and not sched.dropped
+    assert registry.stats["promotions"] >= 2
+    assert registry.stats["demotions"] + \
+        registry.stats["merged_evictions"] >= 1
+    engine.assert_no_retrace(snap)
+
+
+def test_tierless_registry_unchanged_defaults():
+    """merged_capacity defaults to 0: no tier state, no policy work —
+    the pre-tier registry behavior byte-for-byte."""
+    reg = AdapterRegistry(TINY_PARAMS, TINY_PEFT, 2, rng=RNG)
+    pump(reg, 0, 20)
+    assert reg.stats["promotions"] == 0 and reg.merged_resident() == {}
+    assert reg.merged_for(0) is None
+    assert reg.merged_size_bytes() == 0
+
+
+def test_registry_rejects_inverted_hysteresis():
+    with pytest.raises(ValueError, match="demote_below"):
+        tiered_registry(promote_after=2, demote_below=2)
