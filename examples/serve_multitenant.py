@@ -19,6 +19,11 @@ bank.  The isolation check is tier-faithful (``oracle_tokens``).
 causal pad masking, Mamba-2 and RecurrentGemma via pad-invariant
 recurrent prefill (per-slot SSM/RG-LRU state, DESIGN.md §10).
 
+``--deadline-ms`` stamps per-request SLOs (replayed on the real clock);
+``--chaos-seed`` injects a seeded fault plan — corrupted adapters,
+kernel raises, merge failures, stragglers, eviction storms — and the
+report shows the split failure accounting (DESIGN.md §12).
+
     PYTHONPATH=src python examples/serve_multitenant.py --tenants 64
     PYTHONPATH=src python examples/serve_multitenant.py \
         --arch mamba2-1.3b --tenants 32
@@ -33,8 +38,9 @@ from repro.configs import get_config, peft_targets
 from repro.core.peft import AdapterBank, validate_tenant_ids
 from repro.core.transforms import PEFTConfig
 from repro.models import init_model
-from repro.serving import (AdapterRegistry, Scheduler, ServeEngine,
-                           oracle_tokens, summarize, synthetic_workload)
+from repro.serving import (AdapterRegistry, FaultPlan, Scheduler,
+                           ServeEngine, oracle_tokens, summarize,
+                           synthetic_workload)
 
 
 def main():
@@ -55,6 +61,14 @@ def main():
     ap.add_argument("--zipf-a", type=float, default=1.5,
                     help="tenant popularity skew (skewed traffic "
                          "exercises hot-tenant promotion)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request total SLO deadline in ms (0 = "
+                         "none; deadlines need the real clock, so this "
+                         "switches the replay off saturation mode)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="inject a seeded FaultPlan (all fault classes, "
+                         "DESIGN.md §12); the report adds failure "
+                         "accounting with typed outcomes")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, "smoke")
@@ -72,19 +86,24 @@ def main():
         raise SystemExit(f"--gen {args.gen} leaves no room inside the "
                          f"attention window {window}")
 
+    faults = None
+    if args.chaos_seed is not None:
+        faults = FaultPlan.sample(args.chaos_seed, n_steps=32,
+                                  tenants=args.tenants)
     capacity = max(2, args.tenants // 4)
     registry = AdapterRegistry(params, peft, capacity,
                                n_tenants=args.tenants,
                                rng=jax.random.fold_in(rng, 1),
                                merged_capacity=args.merged_capacity,
-                               promote_after=2, window=16, min_dwell=4)
+                               promote_after=2, window=16, min_dwell=4,
+                               faults=faults)
     kb = registry.bank.size_bytes() / 1e3
     print(f"adapter bank: capacity {capacity} of {args.tenants} tenants "
           f"= {kb:.1f} KB HBM ({kb / capacity:.2f} KB/tenant)")
 
     engine = ServeEngine(cfg, params, registry, peft, slots=args.slots,
                          prompt_buckets=(bucket,),
-                         max_new_tokens=args.gen)
+                         max_new_tokens=args.gen, faults=faults)
     snap = engine.warmup()
 
     # a malformed tenant id raises at the frontend instead of silently
@@ -94,22 +113,39 @@ def main():
     except ValueError as e:
         print(f"frontend id validation: OK ({e})")
 
+    deadline_s = args.deadline_ms / 1e3 if args.deadline_ms > 0 else None
     workload = synthetic_workload(args.requests, args.tenants,
                                   vocab=cfg.vocab, rate_rps=None,
                                   zipf_a=args.zipf_a,
                                   prompt_lens=(4, bucket),
-                                  gen_lens=(2, args.gen), seed=3)
-    sched = Scheduler(engine)
+                                  gen_lens=(2, args.gen), seed=3,
+                                  deadline_ttft_s=deadline_s
+                                  and deadline_s / 2,
+                                  deadline_total_s=deadline_s)
+    sched = Scheduler(engine, watchdog_s=10 * deadline_s
+                      if deadline_s else None)
+    # deadlines are inert under the inf saturation clock, so a deadline
+    # run replays on the real clock instead
     done = sched.run(copy.deepcopy(workload),
-                     clock=lambda: float("inf"))
+                     clock=None if deadline_s else lambda: float("inf"))
     engine.assert_no_retrace(snap)
-    s = summarize(done, dropped=len(sched.dropped))
+    s = summarize(done, scheduler=sched)
     print(f"served {s['n_requests']} requests / "
-          f"{s['generated_tokens']} tokens: "
-          f"{s['throughput_tok_s']:.0f} tok/s, "
-          f"p50 {s['p50_ms_per_token']:.2f} ms/token; churn: "
-          f"{registry.stats['misses']} onboards, "
+          f"{s.get('generated_tokens', 0)} tokens: "
+          f"{s.get('throughput_tok_s', 0.0):.0f} tok/s, "
+          f"p50 {s.get('p50_ms_per_token', float('nan')):.2f} ms/token; "
+          f"churn: {registry.stats['misses']} onboards, "
           f"{registry.stats['evictions']} evictions, 0 recompiles")
+    if deadline_s:
+        print(f"SLO attainment: ttft "
+              f"{s.get('slo_ttft_attained', 1.0) * 100:.0f}%  total "
+              f"{s.get('slo_total_attained', 1.0) * 100:.0f}%")
+    acc = sched.accounting()
+    if any(acc.values()) or faults is not None:
+        print(f"degradation: {acc}"
+              + (f"  injected {faults.summary() or '(nothing fired)'}  "
+                 f"quarantined {sorted(registry.quarantined())}"
+                 if faults is not None else ""))
     if args.merged_capacity:
         t, r = engine.tier_stats, registry.stats
         total = t["merged_tokens"] + t["bank_tokens"]

@@ -37,6 +37,16 @@ trace is counted and shed, never a replay abort.  With
 cache and served reflection-free; the report adds the hot-tier token
 hit rate, promotion/demotion/eviction counts, and merge time.
 
+``--deadline-ms`` stamps per-request SLOs (TTFT = half the budget;
+blown-TTFT requests are shed before prefill, blown-total cancelled by
+the watchdog) and the report adds SLO-attainment columns.
+``--chaos-seed`` replays the same trace under a seeded
+:class:`~repro.serving.FaultPlan` drawing from every fault class —
+corrupted adapters, kernel raises, merge failures, stragglers, eviction
+storms (DESIGN.md §12) — and the report adds the split failure
+accounting plus typed outcome counts.  Degradation is bookkeeping:
+zero recompiles is asserted in both modes.
+
 All four decoder families serve through the engine: attention models
 via causal pad masking, Mamba-2 (``--arch mamba2-1.3b``) and
 RecurrentGemma (``--arch recurrentgemma-9b``) via pad-invariant
@@ -122,20 +132,29 @@ def run_trace(args, cfg, peft, params, rng):
     """Continuous-batching replay over the serve engine."""
     import jax
     from repro.core.peft import validate_tenant_ids
-    from repro.serving import (AdapterRegistry, Scheduler, ServeEngine,
-                               summarize, synthetic_workload)
+    from repro.serving import (AdapterRegistry, FaultPlan, Scheduler,
+                               ServeEngine, summarize, synthetic_workload)
 
     capacity = args.tenants if args.tenants > 0 else 8
     distinct = args.distinct_tenants or 4 * capacity
     n_req = args.requests or 3 * capacity
     buckets = tuple(int(b) for b in args.prompt_buckets.split(","))
 
+    faults = None
+    if args.chaos_seed is not None:
+        # seeded chaos replay (DESIGN.md §12): injected faults from every
+        # class; the replay must complete with typed per-request outcomes
+        faults = FaultPlan.sample(args.chaos_seed,
+                                  n_steps=max(16, n_req * args.gen
+                                              // max(args.slots, 1)),
+                                  tenants=distinct)
     registry = AdapterRegistry(params, peft, capacity, n_tenants=distinct,
                                rng=jax.random.fold_in(rng, 1),
-                               merged_capacity=args.merged_capacity)
+                               merged_capacity=args.merged_capacity,
+                               faults=faults)
     engine = ServeEngine(cfg, params, registry, peft, slots=args.slots,
                          prompt_buckets=buckets,
-                         max_new_tokens=args.gen)
+                         max_new_tokens=args.gen, faults=faults)
     kb = registry.bank.size_bytes() / 1e3
     tier = (f", merged tier {args.merged_capacity} tenants"
             if args.merged_capacity else "")
@@ -149,11 +168,15 @@ def run_trace(args, cfg, peft, params, rng):
     print(f"warmup (all compiles): {time.perf_counter() - t0:.1f} s  "
           f"traces: {snap}")
 
+    deadline_s = args.deadline_ms / 1e3 if args.deadline_ms > 0 else None
     workload = synthetic_workload(
         n_req, distinct, vocab=cfg.vocab,
         rate_rps=args.rate if args.rate > 0 else None,
         zipf_a=args.zipf_a, prompt_lens=(4, buckets[-1]),
-        gen_lens=(2, args.gen), seed=args.seed)
+        gen_lens=(2, args.gen), seed=args.seed,
+        # half the budget for the first token, the rest for decode
+        deadline_ttft_s=deadline_s and deadline_s / 2,
+        deadline_total_s=deadline_s)
     # frontend guard: a bad tenant id must raise, never clamp-serve
     # another tenant's adapter
     validate_tenant_ids([r.tenant_id for r in workload], distinct)
@@ -161,25 +184,50 @@ def run_trace(args, cfg, peft, params, rng):
     print(f"replaying {n_req} requests over {n_distinct} distinct "
           f"tenants (Poisson rate "
           f"{args.rate if args.rate > 0 else 'inf'}/s, "
-          f"Zipf a={args.zipf_a})")
+          f"Zipf a={args.zipf_a}"
+          + (f", deadline {args.deadline_ms:.0f} ms" if deadline_s else "")
+          + (f", chaos seed {args.chaos_seed}" if faults else "") + ")")
 
-    sched = Scheduler(engine)
+    # the watchdog backstops the per-request deadlines: a wedged slot is
+    # cancelled even when its request carries no deadline at all
+    sched = Scheduler(engine, watchdog_s=10 * deadline_s
+                      if deadline_s else None)
     done = sched.run(workload)
-    engine.assert_no_retrace(snap)
+    engine.assert_no_retrace(snap)       # degradation never recompiles
     if n_distinct > capacity and not registry.stats["evictions"]:
         raise AssertionError("distinct tenants exceeded bank capacity "
                              "but nothing was evicted")
 
-    s = summarize(done, dropped=len(sched.dropped))
+    s = summarize(done, scheduler=sched)
     r = registry.stats
     print(f"completed {s['n_requests']} requests "
-          f"({s['n_dropped']} rejected at admission), "
-          f"{s['generated_tokens']} tokens in {s['span_s']:.2f} s")
-    print(f"throughput: {s['throughput_tok_s']:.1f} tok/s   "
-          f"per-token latency p50 {s['p50_ms_per_token']:.2f} ms / "
-          f"p95 {s['p95_ms_per_token']:.2f} ms   "
-          f"ttft p50 {s['ttft_p50_ms']:.1f} ms / "
-          f"p95 {s['ttft_p95_ms']:.1f} ms")
+          f"({s['n_dropped']} shed at admission, "
+          f"{len(sched.failed)} failed in flight), "
+          f"{s.get('generated_tokens', 0)} tokens in "
+          f"{s.get('span_s', 0.0):.2f} s")
+    if s["n_requests"]:
+        print(f"throughput: {s['throughput_tok_s']:.1f} tok/s   "
+              f"per-token latency p50 {s['p50_ms_per_token']:.2f} ms / "
+              f"p95 {s['p95_ms_per_token']:.2f} ms   "
+              f"ttft p50 {s['ttft_p50_ms']:.1f} ms / "
+              f"p95 {s['ttft_p95_ms']:.1f} ms")
+    if deadline_s:
+        print(f"SLO attainment: ttft "
+              f"{s.get('slo_ttft_attained', 1.0) * 100:.1f}%  total "
+              f"{s.get('slo_total_attained', 1.0) * 100:.1f}%  "
+              f"(shed/cancelled count as missed)")
+    acc = sched.accounting()
+    if any(acc.values()):
+        kinds: dict[str, int] = {}
+        for req in (sched.failed + sched.shed_deadline
+                    + sched.failed_quarantine):
+            kinds[req.error.kind] = kinds.get(req.error.kind, 0) + 1
+        print(f"failure accounting: {acc}  outcome kinds: {kinds}")
+    if faults is not None:
+        print(f"chaos: injected {faults.summary() or '(nothing fired)'}  "
+              f"engine {engine.fault_stats}  "
+              f"quarantined {sorted(registry.quarantined())}  "
+              f"merge-fenced {sorted(registry.merge_fenced())}")
     print(f"registry churn: {r['hits']} hits, {r['misses']} onboards "
           f"({r['evictions']} evictions), "
           f"{r['swap_s'] / max(r['swaps'], 1) * 1e3:.2f} ms/swap")
@@ -239,6 +287,17 @@ def main():
                          "absorbed into cached merged weights)")
     ap.add_argument("--prompt-buckets", default="16,32",
                     help="comma-separated prompt pad buckets")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request total SLO deadline in ms (half the "
+                         "budget is the TTFT deadline; blown-TTFT "
+                         "requests are shed before prefill, blown-total "
+                         "cancelled in flight; 0 = no deadlines)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="seed a FaultPlan over every fault class "
+                         "(corrupt/kernel/merge/straggler/evict_storm) "
+                         "and replay under injected failures — the "
+                         "report adds failure accounting and typed "
+                         "outcome counts (DESIGN.md §12)")
     args = ap.parse_args()
 
     import jax

@@ -1,22 +1,30 @@
 """Continuous-batching multi-tenant serving subsystem (DESIGN.md §9).
 
 ``registry``  — host tenant store + fixed-capacity device AdapterBank +
-                the merged-weight hot tier (merge-on-promotion, §11)
+                the merged-weight hot tier (merge-on-promotion, §11) +
+                quarantine/merge-fencing degradation state (§12)
 ``engine``    — jit-stable slotted decode engine (prefill-into-slot,
                 fused batched decode step + merged-tier step variant,
-                retrace counters)
+                in-jit non-finite guard, retrace counters)
 ``scheduler`` — FCFS admission with tier-affinity lookahead, slot
-                allocation, Poisson/Zipf workloads
+                allocation, Poisson/Zipf workloads, per-request SLO
+                deadlines + watchdog, split failure accounting
+``faults``    — seeded deterministic fault injection (FaultPlan) for
+                the degradation property tests (§12)
 ``oracle``    — tier-faithful one-shot engine-vs-oracle equivalence
 """
 
 from repro.serving.engine import ServeEngine
+from repro.serving.faults import FAULT_CLASSES, FaultPlan, InjectedFault
 from repro.serving.oracle import oracle_tokens
-from repro.serving.registry import AdapterRegistry
-from repro.serving.scheduler import (AdmissionError, FCFSQueue, Request,
+from repro.serving.registry import AdapterRegistry, AdapterValidationError
+from repro.serving.scheduler import (AdmissionError, ERROR_KINDS, FCFSQueue,
+                                     QuarantineError, Request, RequestError,
                                      Scheduler, SlotAllocator, summarize,
                                      synthetic_workload)
 
-__all__ = ["ServeEngine", "AdapterRegistry", "AdmissionError", "FCFSQueue",
-           "Request", "Scheduler", "SlotAllocator", "summarize",
+__all__ = ["ServeEngine", "AdapterRegistry", "AdapterValidationError",
+           "AdmissionError", "ERROR_KINDS", "FAULT_CLASSES", "FCFSQueue",
+           "FaultPlan", "InjectedFault", "QuarantineError", "Request",
+           "RequestError", "Scheduler", "SlotAllocator", "summarize",
            "synthetic_workload", "oracle_tokens"]

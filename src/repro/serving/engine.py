@@ -59,7 +59,8 @@ from repro.models import api
 from repro.models.backbone import ModelConfig
 from repro.models.encdec import EncDecConfig
 from repro.serving.registry import AdapterRegistry
-from repro.serving.scheduler import AdmissionError, Request, SlotAllocator
+from repro.serving.scheduler import (AdmissionError, Request, RequestError,
+                                     SlotAllocator)
 
 Params = dict[str, Any]
 
@@ -98,9 +99,22 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: Params,
                  registry: AdapterRegistry, peft, *, slots: int = 8,
                  prompt_buckets=DEFAULT_BUCKETS, max_new_tokens: int = 32,
-                 max_len: Optional[int] = None):
+                 max_len: Optional[int] = None, faults=None,
+                 step_retries: int = 1):
         self.cfg, self.params, self.registry, self.peft = (cfg, params,
                                                            registry, peft)
+        # degradation knobs (DESIGN.md §12): a step dispatch that raises
+        # (XLA/Pallas runtime failure) is retried `step_retries` times
+        # before the whole active batch is failed with typed outcomes;
+        # `faults` is an optional FaultPlan consulted at the step
+        # boundary (None — production — short-circuits every hook)
+        if step_retries < 0:
+            raise ValueError("step_retries must be >= 0")
+        self.step_retries = int(step_retries)
+        self._faults = faults
+        self._step_ordinal = 0
+        self.fault_stats = dict(step_retries=0, step_failures=0,
+                                nonfinite_slots=0, cancels=0)
         self.slots = int(slots)
         self.prompt_buckets = tuple(sorted({int(b) for b in prompt_buckets}))
         if not self.prompt_buckets or self.prompt_buckets[0] < 1:
@@ -195,10 +209,31 @@ class ServeEngine:
         return self._advance(state, logits, new_cache)
 
     def _advance(self, state, logits, new_cache):
-        """Shared slot bookkeeping for both step tiers (traced)."""
+        """Shared slot bookkeeping for both step tiers (traced).
+
+        Also computes the per-slot non-finite-logits flag HERE, inside
+        the jit (DESIGN.md §12): finiteness of the SAMPLED logit — an
+        O(slots) gather at the argmax the sampler already computed, not
+        a second O(slots·vocab) pass.  ``jnp.argmax`` treats NaN as
+        maximal, so any NaN in a row samples its NaN index; +Inf is
+        sampled by construction; an all--Inf row gathers -Inf — the
+        only rows the full-row reduce would additionally flag are
+        partial--Inf rows with a finite max, and under greedy sampling
+        those emit exactly the healthy argmax token (not degradation).
+        The flags ride back with the sampled tokens in the same
+        ``device_get`` — no extra kernel round-trip, no second host
+        sync, and by construction no new compile (the trace counters
+        prove it).  The flag is masked by ``active`` because inactive
+        slots decode garbage by design — their drift must never
+        quarantine anyone.  Batched decode is independent along the
+        slot axis, so a NaN cannot cross slots: the flag identifies
+        exactly the poisoned slot(s)."""
         cache = state["cache"]
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        last = logits[:, -1]
+        nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        sampled = jnp.take_along_axis(last, nxt[:, None], axis=-1)[:, 0]
         active = state["active"]
+        bad = active & ~jnp.isfinite(sampled)
         # inactive slots keep their cursor (their garbage KV write lands
         # on the same in-bounds position every step, and their recurrent
         # state drifts harmlessly — every cache leaf row is fully
@@ -213,7 +248,7 @@ class ServeEngine:
             tenant=state["tenant"],
             active=active & (remaining > 0),
             remaining=remaining,
-        ), nxt
+        ), nxt, bad
 
     def _make_prefill(self, bucket: int):
         def impl(params, bank, state, tokens, true_len, slot, tslot,
@@ -227,6 +262,11 @@ class ServeEngine:
                 tenant_ids=tslot[None], true_lens=true_len[None])
             cache1 = api.pad_cache(cache1, self.cfg, self.max_len)
             tok = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+            # same in-jit non-finite guard as _advance (finiteness of
+            # the SAMPLED logit), at the prefill boundary: a poisoned
+            # tenant must be caught on its FIRST token (a 1-token
+            # request never reaches a decode step)
+            bad = ~jnp.isfinite(logits[0, -1, tok])
             cache = state["cache"]
             new_cache: Params = {"cursor": cache["cursor"].at[slot]
                                  .set(true_len)}
@@ -245,7 +285,7 @@ class ServeEngine:
                 tenant=state["tenant"].at[slot].set(tslot),
                 active=state["active"].at[slot].set(max_new > 1),
                 remaining=remaining,
-            ), tok
+            ), tok, bad
         return impl
 
     # -- serving API --------------------------------------------------
@@ -318,15 +358,25 @@ class ServeEngine:
         tokens = np.zeros((1, bucket), np.int32)
         tokens[0, :plen] = np.asarray(req.prompt, np.int32)
         t0 = self._now()
-        state, tok = self._prefill_fns[bucket](
+        state, tok, bad = self._prefill_fns[bucket](
             self.params, self.registry.bank, self._state, tokens,
             int(plen), int(slot), int(tslot), int(req.max_new_tokens))
-        first = int(tok)                               # device sync
+        first, poisoned = jax.device_get((tok, bad))   # device sync
         self._state = state
         req.slot = slot
         req.admit_s = t0
+        if bool(poisoned):
+            # the tenant's adapters produced non-finite prefill logits:
+            # quarantine BEFORE retiring (so the release inside _retire
+            # sees the flag and runs the deferred two-tier eviction when
+            # the last pin drops) and return the request with a typed
+            # outcome instead of a garbage first token
+            self._requests[slot] = req
+            return [self._fail_slot(slot, RequestError(
+                "nonfinite", f"tenant {req.tenant_id} produced "
+                f"non-finite prefill logits"))]
         req.first_token_s = self._now()
-        req.tokens.append(first)
+        req.tokens.append(int(first))
         # prefill (and its first token) always runs the bank tier: hot
         # tenants are bank-resident too, and per-bucket merged prefill
         # variants would multiply compiles for a non-steady-state cost
@@ -346,33 +396,112 @@ class ServeEngine:
         bank step, bitwise identical to a tierless engine.  Each token
         records which tier produced it (``req.tiers``) so the oracle can
         replay the exact schedule (merged vs reflect-then-GEMM differ in
-        rounding)."""
+        rounding).
+
+        Degradation (DESIGN.md §12): the FaultPlan hooks fire at this
+        dispatch boundary (eviction storms, straggler delays, injected
+        kernel raises); a dispatch that raises ``RuntimeError`` is
+        retried up to ``step_retries`` times, then the whole active
+        batch fails with typed ``kernel`` outcomes — one bad step must
+        cost its in-flight requests, never the replay.  Slots whose
+        non-finite flag fired are quarantined at retire time with typed
+        ``nonfinite`` outcomes."""
         if not self._requests:
             return []
+        ordinal = self._step_ordinal
+        self._step_ordinal += 1
+        if self._faults is not None and self._faults.storm_now(ordinal):
+            # memory-pressure eviction storm: pins keep every in-flight
+            # tenant resident, so the step below still serves correctly
+            self.registry.flush_unpinned()
         tids = {r.tenant_id for r in self._requests.values()}
         merged = (self.registry.merged_for(next(iter(tids)))
                   if len(tids) == 1 else None)
         t0 = time.perf_counter()
-        if merged is not None:
-            tier = "merged"
-            state, nxt = self._merged_step_fn(merged, self._state)
+        last_err = None
+        for attempt in range(1 + self.step_retries):
+            if attempt:
+                self.fault_stats["step_retries"] += 1
+            try:
+                if self._faults is not None:
+                    self._faults.on_step(ordinal)
+                if merged is not None:
+                    tier = "merged"
+                    state, nxt, bad = self._merged_step_fn(merged,
+                                                           self._state)
+                else:
+                    tier = "bank"
+                    state, nxt, bad = self._step_fn(
+                        self.params, self.registry.bank, self._state)
+                # one fetch returns tokens AND non-finite flags — the
+                # healthy path pays no second device sync for the guard
+                toks, flags = jax.device_get((nxt, bad))
+                break
+            except RuntimeError as e:
+                # XLA/Pallas runtime failure (InjectedFault models it)
+                last_err = e
         else:
-            tier = "bank"
-            state, nxt = self._step_fn(self.params, self.registry.bank,
-                                       self._state)
-        toks = np.asarray(nxt)                         # device sync
+            return self._fail_batch(ordinal, last_err)
         dt = time.perf_counter() - t0
         self._state = state
         self.tier_stats[f"{tier}_steps"] += 1
         self.tier_stats[f"{tier}_tokens"] += len(self._requests)
         finished = []
         for slot, req in list(self._requests.items()):
+            if flags[slot]:
+                finished.append(self._fail_slot(slot, RequestError(
+                    "nonfinite", f"tenant {req.tenant_id} produced "
+                    f"non-finite logits", step=ordinal)))
+                continue
             req.tokens.append(int(toks[slot]))
             req.tiers.append(tier)
             req.step_s.append(dt)
             if req.done:
                 finished.append(self._retire(slot))
         return finished
+
+    def _fail_slot(self, slot: int, error: RequestError) -> Request:
+        """Quarantine path for a poisoned slot: mark the tenant suspect
+        (two-tier eviction, deferred past its last pin), deactivate the
+        slot on device so it stops burning decode work, and retire the
+        request with its typed outcome."""
+        req = self._requests[slot]
+        req.error = error
+        if error.kind == "nonfinite":
+            self.fault_stats["nonfinite_slots"] += 1
+            self.registry.mark_suspect(req.tenant_id)
+        self._state["active"] = self._state["active"].at[slot].set(False)
+        return self._retire(slot)
+
+    def _fail_batch(self, ordinal: int, err) -> list[Request]:
+        """Step retries exhausted: fail every in-flight request with a
+        typed ``kernel`` outcome and reset the slot mask — the engine
+        stays serviceable (state shapes untouched, nothing retraces) and
+        the next admissions overwrite the dead rows wholesale."""
+        self.fault_stats["step_failures"] += 1
+        out = []
+        for slot, req in list(self._requests.items()):
+            req.error = RequestError("kernel", str(err), step=ordinal)
+            out.append(self._retire(slot))
+        self._state["active"] = jnp.zeros_like(self._state["active"])
+        self._state["remaining"] = jnp.zeros_like(self._state["remaining"])
+        return out
+
+    def inflight(self) -> dict[int, Request]:
+        """slot → in-flight request (scheduler watchdog introspection)."""
+        return dict(self._requests)
+
+    def cancel(self, slot: int, error: RequestError) -> Request:
+        """Cancel one in-flight request with a typed outcome (watchdog /
+        blown total deadline).  Host bookkeeping plus a single slot
+        deactivation — no retrace, no effect on sibling slots."""
+        if slot not in self._requests:
+            raise ValueError(f"slot {slot} has no in-flight request")
+        self.fault_stats["cancels"] += 1
+        req = self._requests[slot]
+        req.error = error
+        self._state["active"] = self._state["active"].at[slot].set(False)
+        return self._retire(slot)
 
     def preferred_tenant(self) -> Optional[int]:
         """Affinity hint for the scheduler: the most common hot-tier
@@ -406,14 +535,14 @@ class ServeEngine:
         scratch = self._state
         for b in self.prompt_buckets:
             tokens = np.zeros((1, b), np.int32)
-            state, _ = self._prefill_fns[b](
+            state, _, _ = self._prefill_fns[b](
                 self.params, self.registry.bank, scratch, tokens,
                 int(1), int(0), int(0), int(2))
-        state, _ = self._step_fn(self.params, self.registry.bank, state)
+        state, _, _ = self._step_fn(self.params, self.registry.bank, state)
         # the merged-tier step: base params share every leaf shape/dtype
         # with a merged tree, so this one compile covers every future
         # hot tenant — promotions/demotions mid-trace never retrace
-        state2, _ = self._merged_step_fn(self.params, state)
+        state2, _, _ = self._merged_step_fn(self.params, state)
         jax.block_until_ready(state2["tok"])
         tree = self.registry.adapters_for(0)           # warms init_fn
         discarded = self.registry._swap(self.registry.bank, tree,

@@ -1,0 +1,227 @@
+"""Deterministic fault injection for the serving subsystem (DESIGN.md
+§12).
+
+Every graceful-degradation path the engine/registry/scheduler claim to
+have must be exercisable as a *reproducible property test*, not a war
+story.  A :class:`FaultPlan` is a seeded, host-side schedule of
+injected failures; the serving layers consult it at their natural
+failure boundaries and otherwise pay nothing (``faults=None`` is the
+production configuration and short-circuits every hook).
+
+Five fault classes, one per operational failure mode the tiered
+multi-tenant engine has to survive:
+
+``corrupt``
+    A tenant's adapter tree is poisoned with NaN/Inf *below* the
+    ``put`` validation boundary (modeling in-memory/device corruption
+    or a finite-but-overflowing finetune — the host-side ``put``
+    validator catches malformed uploads, this class covers what slips
+    past it).  Detection: the engine's in-jit non-finite logits flag;
+    action: quarantine slot + tenant (§12 degradation matrix).
+``kernel``
+    The fused decode step raises on its Nth dispatch (modeling an XLA/
+    Pallas runtime failure).  Detection: the step call raises; action:
+    bounded retry, then fail the active requests with typed outcomes.
+``merge``
+    The hot-tier promotion merge fails for specific tenants (modeling
+    an async merge dying mid-promotion).  Detection: the registry's
+    merge dispatch raises; action: bounded retry-with-backoff, then
+    fence the tenant to the bank tier (``merge_failures``).
+``straggler``
+    Specific decode steps are slowed by an injected host-side delay
+    (modeling preemption/thermal throttling/a slow host).  Detection:
+    deadlines + watchdog; action: shed-before-prefill and cancel.
+``evict_storm``
+    At specific steps every *unpinned* tenant is flushed from both
+    registry tiers (modeling memory-pressure mass eviction).  Action:
+    nothing to detect — serving must simply survive the re-onboarding
+    churn with pins respected and zero retraces.
+
+Injection sites raise :class:`InjectedFault` (and only the layers'
+documented degradation paths may catch it), so a fault escaping its
+handler fails tests loudly instead of being absorbed.  The plan counts
+every firing in :attr:`FaultPlan.fired` — tests assert the fault
+actually happened, never just that nothing crashed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional
+
+import numpy as np
+
+Params = dict[str, Any]
+
+FAULT_CLASSES = ("corrupt", "kernel", "merge", "straggler", "evict_storm")
+
+
+class InjectedFault(RuntimeError):
+    """An injected failure.  Raised at the exact boundary the modeled
+    real failure would surface at; only the documented degradation
+    handler for that boundary may catch it."""
+
+
+def corrupt_tree(tree: Params, kind: str = "nan") -> Params:
+    """Poison every float leaf of an adapter tree with a NaN/Inf in its
+    first element — the minimal corruption that still propagates into
+    the slot's logits through any targeted module."""
+    import jax
+    import jax.numpy as jnp
+
+    if kind not in ("nan", "inf"):
+        raise ValueError(f"corruption kind must be 'nan'|'inf', "
+                         f"got {kind!r}")
+    bad = float("nan") if kind == "nan" else float("inf")
+
+    def _poison(leaf):
+        leaf = jnp.asarray(leaf)
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        flat = leaf.reshape(-1)
+        return flat.at[0].set(bad).reshape(leaf.shape)
+
+    return jax.tree_util.tree_map(_poison, tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded, immutable schedule of injected serving failures.
+
+    All schedules are in *host-observable* units so replays are
+    deterministic regardless of device timing: decode-step ordinals
+    (the engine's Nth call of its fused step since construction) and
+    tenant ids.  ``fired`` is the only mutable part — a counter dict
+    proving which injections actually happened.
+    """
+
+    seed: int = 0
+    # tenant id -> "nan" | "inf": poison this tenant's adapters below
+    # the put-validation boundary
+    corrupt_adapters: Mapping[int, str] = \
+        dataclasses.field(default_factory=dict)
+    # decode-step ordinals (0-based) whose dispatch raises InjectedFault
+    kernel_raise_at: frozenset = frozenset()
+    # False: one scheduled kernel failure is transient (the engine's
+    # retry succeeds).  True: every attempt at a scheduled ordinal
+    # fails — exercises the retries-exhausted path
+    kernel_persistent: bool = False
+    # tenant id -> number of consecutive merge dispatches that fail
+    # (>= registry merge_retries + 1 means the tenant is fenced)
+    merge_fail: Mapping[int, int] = dataclasses.field(default_factory=dict)
+    # decode-step ordinal -> injected host-side delay in seconds
+    slow_steps: Mapping[int, float] = dataclasses.field(default_factory=dict)
+    # decode-step ordinals at which all unpinned tenants are flushed
+    # from both registry tiers
+    evict_storm_at: frozenset = frozenset()
+    # runtime proof-of-firing counters (mutable on a frozen dataclass:
+    # the dict identity is frozen, its contents are the log)
+    fired: dict = dataclasses.field(default_factory=dict, compare=False)
+
+    @classmethod
+    def sample(cls, seed: int, *, classes=FAULT_CLASSES, n_steps: int = 64,
+               tenants: int = 8, n_events: int = 2,
+               merge_failures: int = 1, slow_s: float = 0.02,
+               persistent_merge_failure: bool = False) -> "FaultPlan":
+        """Draw a deterministic plan from ``seed``: ``n_events`` firing
+        points per requested class, spread over ``n_steps`` decode steps
+        and ``tenants`` tenant ids.  The same (seed, kwargs) always
+        yields the same plan — chaos replays are reproducible."""
+        bad = sorted(set(classes) - set(FAULT_CLASSES))
+        if bad:
+            raise ValueError(f"unknown fault classes {bad}; expected a "
+                             f"subset of {FAULT_CLASSES}")
+        rng = np.random.default_rng(seed)
+        # skip the first few steps so warmup/first admissions are clean
+        lo = min(2, max(0, n_steps - 1))
+
+        def _steps(n):
+            hi = max(n_steps, lo + 1)
+            return frozenset(int(s) for s in
+                             rng.integers(lo, hi, size=n))
+
+        def _tids(n):
+            return [int(t) for t in rng.integers(0, max(tenants, 1),
+                                                 size=n)]
+
+        kw: dict[str, Any] = {}
+        if "corrupt" in classes:
+            kinds = ("nan", "inf")
+            kw["corrupt_adapters"] = {
+                t: kinds[i % 2] for i, t in enumerate(_tids(n_events))}
+        if "kernel" in classes:
+            kw["kernel_raise_at"] = _steps(n_events)
+        if "merge" in classes:
+            n_fail = (10 ** 9 if persistent_merge_failure
+                      else merge_failures)
+            kw["merge_fail"] = {t: n_fail for t in _tids(n_events)}
+        if "straggler" in classes:
+            kw["slow_steps"] = {int(s): float(slow_s)
+                                for s in _steps(n_events)}
+        if "evict_storm" in classes:
+            kw["evict_storm_at"] = _steps(n_events)
+        return cls(seed=seed, **kw)
+
+    def _fire(self, key: str) -> None:
+        self.fired[key] = self.fired.get(key, 0) + 1
+
+    # -- registry hooks ------------------------------------------------
+
+    def corrupt_kind(self, tenant_id: int) -> Optional[str]:
+        """Corruption kind for this tenant's adapters, or None.  The
+        registry applies it once, below the put-validation boundary."""
+        kind = self.corrupt_adapters.get(int(tenant_id))
+        if kind is not None:
+            self._fire(f"corrupt:{int(tenant_id)}")
+        return kind
+
+    def merge_should_fail(self, tenant_id: int) -> bool:
+        """True (consuming one failure token) while this tenant's merge
+        dispatches are scheduled to fail."""
+        tid = int(tenant_id)
+        left = self.merge_fail.get(tid, 0)
+        done = self.fired.get(f"merge:{tid}", 0)
+        if done < left:
+            self._fire(f"merge:{tid}")
+            return True
+        return False
+
+    # -- engine hooks --------------------------------------------------
+
+    def on_step(self, ordinal: int) -> None:
+        """Called by the engine once per fused-step *attempt* with the
+        0-based step ordinal.  May sleep (straggler) and/or raise
+        :class:`InjectedFault` (kernel failure).  A retried step runs
+        the hook again with the same ordinal — the kernel fault is
+        keyed on the ordinal, so one scheduled failure is transient by
+        construction (the retry's hook call no longer fires)."""
+        delay = self.slow_steps.get(int(ordinal))
+        if delay:
+            # fire once per ordinal — a retry does not double-sleep
+            if f"straggler:{ordinal}" not in self.fired:
+                self._fire(f"straggler:{ordinal}")
+                import time
+                time.sleep(delay)
+        if int(ordinal) in self.kernel_raise_at and (
+                self.kernel_persistent
+                or f"kernel:{ordinal}" not in self.fired):
+            self._fire(f"kernel:{ordinal}")
+            raise InjectedFault(
+                f"injected pallas kernel failure at decode step "
+                f"{ordinal}")
+
+    def storm_now(self, ordinal: int) -> bool:
+        """True when an eviction storm is scheduled at this step."""
+        if (int(ordinal) in self.evict_storm_at
+                and f"evict_storm:{ordinal}" not in self.fired):
+            self._fire(f"evict_storm:{ordinal}")
+            return True
+        return False
+
+    def summary(self) -> dict[str, int]:
+        """Firings aggregated per fault class (for reports/tests)."""
+        out: dict[str, int] = {}
+        for key, n in self.fired.items():
+            cls = key.split(":", 1)[0]
+            out[cls] = out.get(cls, 0) + n
+        return out

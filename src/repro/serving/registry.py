@@ -43,12 +43,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.peft import (AdapterBank, MergedCache, init_adapter_bank,
+from repro.core.peft import (AdapterBank, MergedCache,
+                             _flatten_adapter_modules, init_adapter_bank,
                              init_adapters, merge_params,
                              validate_tenant_ids)
 from repro.core.transforms import PEFTConfig
+from repro.serving.scheduler import QuarantineError
 
 Params = dict[str, Any]
+
+
+class AdapterValidationError(ValueError):
+    """A ``put`` adapter tree does not match the bank layout — wrong
+    module set, leaf shape/dtype mismatch, or non-finite values.  Raised
+    at the host boundary with the offending path named, instead of
+    failing later inside jit with an opaque shape-error trace (or, for
+    non-finite values, silently poisoning every decode batch the tenant
+    joins)."""
 
 
 class AdapterRegistry:
@@ -60,7 +71,8 @@ class AdapterRegistry:
                  init_fn: Optional[Callable[[int], Params]] = None,
                  merged_capacity: int = 0, promote_after: int = 3,
                  demote_below: int = 1, window: int = 32,
-                 min_dwell: int = 16):
+                 min_dwell: int = 16, merge_retries: int = 2,
+                 merge_backoff_s: float = 0.0, faults=None):
         if peft.method not in AdapterBank.BANK_METHODS:
             raise ValueError(f"registry serves {AdapterBank.BANK_METHODS} "
                              f"banks only (got {peft.method!r})")
@@ -105,10 +117,22 @@ class AdapterRegistry:
         self._promoted_at: dict[int, int] = {}  # tid -> request ordinal
         self._merge_t0: dict[int, float] = {}   # pending-ready merges
         self._requests_seen = 0
+        # -- degradation state (DESIGN.md §12) -------------------------
+        if merge_retries < 0:
+            raise ValueError("merge_retries must be >= 0")
+        self.merge_retries = merge_retries
+        self.merge_backoff_s = merge_backoff_s
+        self._faults = faults                  # FaultPlan | None
+        self._faults_corrupted: set[int] = set()
+        self._quarantined: set[int] = set()    # suspect tenants (fenced)
+        self._merge_fenced: set[int] = set()   # permanent merge failures
         self.stats = dict(hits=0, misses=0, evictions=0, swaps=0,
                           swap_s=0.0, swap_traces=0, init_traces=0,
                           promotions=0, demotions=0, merged_evictions=0,
-                          merges_skipped=0, merge_s=0.0, merge_traces=0)
+                          merges_skipped=0, merge_s=0.0, merge_traces=0,
+                          quarantines=0, quarantine_evictions=0,
+                          merge_failures=0, merge_retries=0,
+                          storm_flushes=0)
 
         def _swap_impl(bank, tree, slot):
             # traced body: runs only on a jit cache miss, so this count
@@ -145,17 +169,82 @@ class AdapterRegistry:
 
     def put(self, tenant_id: int, adapters: Params) -> None:
         """Register (or update) a tenant's adapter tree.  If the tenant
-        is currently resident its bank row is refreshed in place."""
+        is currently resident its bank row is refreshed in place.
+
+        The tree is validated against the bank layout at this host
+        boundary (:meth:`validate_adapters`) — structure, shapes,
+        dtypes, finiteness — so a malformed upload raises a typed
+        :class:`AdapterValidationError` here instead of failing later
+        inside jit (or poisoning decode).  A validated ``put`` is also
+        the rehabilitation path: it clears the tenant's quarantine flag
+        and merge fence, since both mark the *old* adapters as bad."""
         self.validate(tenant_id)
-        self._store[int(tenant_id)] = adapters
-        slot = self._slot_of.get(int(tenant_id))
+        self.validate_adapters(adapters)
+        tid = int(tenant_id)
+        self._store[tid] = adapters
+        self._quarantined.discard(tid)
+        self._merge_fenced.discard(tid)
+        slot = self._slot_of.get(tid)
         if slot is not None:
             self._swap_in(slot, adapters)
+
+    def validate_adapters(self, adapters: Params) -> None:
+        """Check an adapter tree against the bank layout: exactly the
+        targeted modules, each with exactly the bank's leaf keys, each
+        leaf with the bank's per-tenant shape and dtype, every value
+        finite.  Raises :class:`AdapterValidationError` naming the first
+        offending path."""
+        expect: dict[str, dict[str, tuple]] = {}
+        for mod, adapter in _flatten_adapter_modules(self.bank.tree):
+            nd = self.bank.stack_ndims[mod]
+            expect[mod] = {
+                k: (v.shape[:nd] + v.shape[nd + 1:], v.dtype)
+                for k, v in adapter.items()}
+        got = dict(_flatten_adapter_modules(adapters))
+        if set(got) != set(expect):
+            missing = sorted(set(expect) - set(got))
+            extra = sorted(set(got) - set(expect))
+            raise AdapterValidationError(
+                f"adapter tree does not match the bank's targeted "
+                f"modules (missing {missing}, unexpected {extra})")
+        for mod, want in expect.items():
+            adapter = got[mod]
+            if set(adapter) != set(want):
+                raise AdapterValidationError(
+                    f"{mod}: adapter leaves {sorted(adapter)} != bank "
+                    f"leaves {sorted(want)}")
+            for k, (shape, dtype) in want.items():
+                leaf = adapter[k]
+                if tuple(np.shape(leaf)) != tuple(shape):
+                    raise AdapterValidationError(
+                        f"{mod}/{k}: shape {tuple(np.shape(leaf))} != "
+                        f"bank per-tenant shape {tuple(shape)}")
+                ldt = getattr(leaf, "dtype", None)
+                if ldt != dtype:
+                    raise AdapterValidationError(
+                        f"{mod}/{k}: dtype {ldt} != bank dtype {dtype} "
+                        f"(cast on the client — the bank swap would "
+                        f"silently coerce)")
+                if not np.all(np.isfinite(np.asarray(leaf))):
+                    raise AdapterValidationError(
+                        f"{mod}/{k}: non-finite values (NaN/Inf) — a "
+                        f"poisoned adapter would corrupt every decode "
+                        f"batch its tenant joins")
 
     def adapters_for(self, tenant_id: int) -> Params:
         tid = int(tenant_id)
         if tid not in self._store:
             self._store[tid] = self._init_fn(tid)
+        if self._faults is not None and tid not in self._faults_corrupted:
+            # injection site for the 'corrupt' fault class: poison the
+            # stored tree BELOW the put-validation boundary (modeling
+            # corruption the host validator cannot see), exactly once
+            # per plan per tenant
+            self._faults_corrupted.add(tid)
+            kind = self._faults.corrupt_kind(tid)
+            if kind is not None:
+                from repro.serving.faults import corrupt_tree
+                self._store[tid] = corrupt_tree(self._store[tid], kind)
         return self._store[tid]
 
     # -- slot lifecycle ----------------------------------------------
@@ -188,6 +277,10 @@ class AdapterRegistry:
         shapes never change, so nothing retraces)."""
         self.validate(tenant_id)
         tid = int(tenant_id)
+        if tid in self._quarantined:
+            # backstop behind the scheduler's is_quarantined shed: a
+            # poisoned adapter must never re-enter the batch
+            raise QuarantineError(f"tenant {tid} is quarantined")
         slot = self._slot_of.get(tid)
         if slot is not None:
             self.stats["hits"] += 1
@@ -205,12 +298,81 @@ class AdapterRegistry:
 
     def release(self, tenant_id: int) -> None:
         """Unpin one in-flight request; the tenant stays resident (warm)
-        until LRU eviction needs its slot."""
+        until LRU eviction needs its slot.  A quarantined tenant's
+        deferred eviction (pins are respected — sibling in-flight
+        requests of the same tenant finish or are failed by their own
+        detection, never yanked by an eviction) runs when the last pin
+        drops."""
         tid = int(tenant_id)
         n = self._pins.get(tid, 0)
         if n <= 0:
             raise ValueError(f"tenant {tid} released but not acquired")
         self._pins[tid] = n - 1
+        if n == 1 and tid in self._quarantined:
+            self._evict_quarantined(tid)
+
+    # -- quarantine & storms (DESIGN.md §12) ---------------------------
+
+    def is_quarantined(self, tenant_id: int) -> bool:
+        return int(tenant_id) in self._quarantined
+
+    def mark_suspect(self, tenant_id: int) -> None:
+        """Quarantine a tenant whose adapters produced non-finite
+        logits: fence it from (re-)acquisition and evict it from both
+        tiers — immediately if unpinned, else deferred to the last
+        :meth:`release`.  Rehabilitation is a fresh validated
+        :meth:`put`."""
+        tid = int(tenant_id)
+        if tid in self._quarantined:
+            return
+        self._quarantined.add(tid)
+        self.stats["quarantines"] += 1
+        if self._pins.get(tid, 0) == 0:
+            self._evict_quarantined(tid)
+
+    def _evict_quarantined(self, tid: int) -> None:
+        """Remove a quarantined tenant from both tiers and scrub its
+        bank row to zeros.  Zeros — not mere freeing — because a zero
+        row is an identity adapter under any gather, while a NaN row is
+        the one kind of stale data masked arithmetic cannot neutralize
+        (``0 * NaN = NaN``).  The poisoned host copy is dropped too."""
+        if tid in self._mslot_of:
+            self.demote(tid)
+        slot = self._slot_of.pop(tid, None)
+        if slot is not None:
+            del self._tenant_of[slot]
+            self._lru.pop(tid, None)
+            self._pins.pop(tid, None)
+            zero = jax.tree_util.tree_map(jnp.zeros_like,
+                                          self.bank.select(slot))
+            self._swap_in(slot, zero)
+            self._free.append(slot)
+        self._store.pop(tid, None)
+        self.stats["quarantine_evictions"] += 1
+
+    def flush_unpinned(self) -> int:
+        """Eviction storm (memory-pressure mass eviction): drop every
+        *unpinned* tenant from both tiers; returns how many entries were
+        flushed.  Pinned tenants (in-flight requests) keep both their
+        bank row and any merged entry — serving survives the storm and
+        re-onboards the flushed tenants on demand through the ordinary
+        swap/merge paths (no retraces: shapes never changed)."""
+        n = 0
+        for tid in [t for t in self._mslot_of
+                    if self._pins.get(t, 0) == 0]:
+            self.demote(tid)
+            n += 1
+        for tid in [t for t in self._lru
+                    if self._pins.get(t, 0) == 0]:
+            slot = self._slot_of.pop(tid)
+            del self._tenant_of[slot]
+            del self._lru[tid]
+            self._pins.pop(tid, None)
+            self._free.append(slot)
+            self.stats["evictions"] += 1
+            n += 1
+        self.stats["storm_flushes"] += 1
+        return n
 
     def _take_slot(self) -> int:
         if self._free:
@@ -253,6 +415,7 @@ class AdapterRegistry:
             else:
                 self._mcounts.pop(old, None)
         if (tid not in self._mslot_of
+                and tid not in self._merge_fenced
                 and self._mcounts[tid] >= self.promote_after):
             self.promote(tid)
         for t in [t for t in self._mslot_of
@@ -273,13 +436,23 @@ class AdapterRegistry:
         kernel-backed ``*_merge`` ops inside one jitted function
         (compiled once — ``merge_traces``) and is NOT blocked on: the
         entry starts serving once its buffers report ready
-        (:meth:`merged_for`)."""
+        (:meth:`merged_for`).
+
+        A merge dispatch that raises is retried up to ``merge_retries``
+        times with exponential backoff (``merge_backoff_s`` base); when
+        retries are exhausted the tenant is *fenced* to the bank tier —
+        it keeps serving un-merged and is never re-promoted
+        (``merge_failures``) until a fresh :meth:`put` replaces the
+        adapters the merge choked on."""
         tid = int(tenant_id)
         if self.merged_capacity == 0:
             raise ValueError("registry has no merged tier "
                              "(merged_capacity=0)")
         if tid in self._mslot_of:
             return True
+        if tid in self._merge_fenced:
+            self.stats["merges_skipped"] += 1
+            return False
         if self._mfree:
             mslot = self._mfree.pop()
         else:
@@ -288,8 +461,16 @@ class AdapterRegistry:
                 self.stats["merges_skipped"] += 1
                 return False
         t0 = time.perf_counter()
-        self.merged = self.merged.put(mslot, self.merge_tree(tid))
+        tree = self._dispatch_merge(tid)
         self.stats["merge_s"] += time.perf_counter() - t0
+        if tree is None:
+            # retries exhausted: return the slot, fence the tenant to
+            # the bank tier — a promotion must never abort serving
+            self._mfree.append(mslot)
+            self._merge_fenced.add(tid)
+            self.stats["merge_failures"] += 1
+            return False
+        self.merged = self.merged.put(mslot, tree)
         self.stats["promotions"] += 1
         self._mslot_of[tid] = mslot
         self._mlru[tid] = None
@@ -323,6 +504,28 @@ class AdapterRegistry:
                 self._merge_t0.pop(tid, None)
                 self.stats["merged_evictions"] += 1
                 return mslot
+        return None
+
+    def _dispatch_merge(self, tid: int) -> Optional[Params]:
+        """Bounded retry-with-backoff around the jitted merge dispatch;
+        None when every attempt failed.  Only ``RuntimeError`` is
+        retried (XLA runtime failures and :class:`InjectedFault` both
+        surface as RuntimeError) — anything else is a registry bug and
+        propagates."""
+        for attempt in range(1 + self.merge_retries):
+            if attempt:
+                self.stats["merge_retries"] += 1
+                if self.merge_backoff_s:
+                    time.sleep(self.merge_backoff_s * 2 ** (attempt - 1))
+            try:
+                if (self._faults is not None
+                        and self._faults.merge_should_fail(tid)):
+                    from repro.serving.faults import InjectedFault
+                    raise InjectedFault(
+                        f"injected merge failure for tenant {tid}")
+                return self.merge_tree(tid)
+            except RuntimeError:
+                continue
         return None
 
     def merge_tree(self, tenant_id: int) -> Params:
@@ -363,6 +566,15 @@ class AdapterRegistry:
         jax.block_until_ready(jax.tree_util.tree_leaves(discard)[0])
 
     # -- introspection ------------------------------------------------
+
+    def quarantined(self) -> frozenset:
+        """Tenant ids currently fenced by quarantine."""
+        return frozenset(self._quarantined)
+
+    def merge_fenced(self) -> frozenset:
+        """Tenant ids fenced from re-promotion by permanent merge
+        failure (bank-tier only until a fresh ``put``)."""
+        return frozenset(self._merge_fenced)
 
     def merged_resident(self) -> dict[int, int]:
         """tenant id → merged slot for every hot-tier tenant."""

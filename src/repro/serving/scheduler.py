@@ -37,6 +37,35 @@ class AdmissionError(ValueError):
     violations) propagates and aborts the replay, as it must."""
 
 
+class QuarantineError(RuntimeError):
+    """The request's tenant is quarantined (its adapters produced
+    non-finite logits, DESIGN.md §12) — the registry refuses to pin it.
+    Deliberately NOT a ``ValueError``: the request itself is well-formed
+    (it must not be mislabeled operator error by the ``AdmissionError``
+    drop path) and not an engine invariant violation (it must not abort
+    the replay) — the scheduler accounts it as ``failed_quarantine``."""
+
+
+# typed per-request failure outcomes (RequestError.kind)
+ERROR_KINDS = ("nonfinite", "kernel", "deadline", "watchdog", "quarantine")
+
+
+@dataclasses.dataclass
+class RequestError:
+    """Typed terminal outcome for a request that did not complete
+    healthily.  ``kind`` is the degradation path that fired (DESIGN.md
+    §12 degradation matrix); ``step`` is the engine decode-step ordinal
+    at detection time, when applicable."""
+    kind: str
+    detail: str = ""
+    step: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in ERROR_KINDS:
+            raise ValueError(f"unknown RequestError kind {self.kind!r}; "
+                             f"expected one of {ERROR_KINDS}")
+
+
 @dataclasses.dataclass
 class Request:
     """One generation request plus its lifecycle bookkeeping."""
@@ -45,6 +74,13 @@ class Request:
     prompt: np.ndarray                 # (P_true,) int32 token ids
     max_new_tokens: int                # total generated incl. first token
     arrival_s: float = 0.0             # offset from replay start
+    # per-request SLOs (None = no deadline): TTFT measured from arrival
+    # to first token, total from arrival to finish.  A blown TTFT
+    # deadline sheds the request BEFORE prefill (no device work wasted
+    # on an answer already late); a blown total deadline cancels it
+    # in flight (watchdog).
+    deadline_ttft_s: Optional[float] = None
+    deadline_total_s: Optional[float] = None
     # filled in by the engine:
     admit_s: Optional[float] = None
     first_token_s: Optional[float] = None
@@ -56,10 +92,16 @@ class Request:
     # aligned with ``tokens`` — the tier-faithful oracle replays this
     # exact schedule (merged vs reflect-then-GEMM differ in rounding)
     tiers: list = dataclasses.field(default_factory=list)
+    # typed terminal outcome; None = completed healthily
+    error: Optional[RequestError] = None
 
     @property
     def done(self) -> bool:
         return len(self.tokens) >= self.max_new_tokens
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
 
 
 class FCFSQueue:
@@ -118,6 +160,29 @@ class FCFSQueue:
         (back-pressure keeps FCFS order)."""
         self._q.appendleft(req)
 
+    def pop_admissible(self, now: float, can_admit, lookahead: int,
+                       skip: int = 1) -> Optional[Request]:
+        """After the head was requeued under back-pressure: the first
+        *ready* request within ``lookahead`` (skipping the blocked
+        head) that ``can_admit`` accepts right now.
+
+        Without this, a head blocked on its tenant's pinned bank slot
+        idled every free decode slot even when a later-queued request
+        of a *resident* tenant (acquirable as a cache hit despite the
+        all-pinned bank) was ready — the back-pressure × tier-affinity
+        starvation case.  Bounded by ``lookahead`` and skipping only
+        the head, so the blocked head is retried first every tick and
+        admits the moment its tenant unpins: cold tenants are delayed
+        at most one in-flight generation, never starved."""
+        for i in range(skip, min(lookahead, len(self._q))):
+            req = self._q[i]
+            if req.arrival_s > now:
+                return None
+            if can_admit(req):
+                del self._q[i]
+                return req
+        return None
+
     def next_arrival(self) -> Optional[float]:
         return self._q[0].arrival_s if self._q else None
 
@@ -151,10 +216,30 @@ class Scheduler:
     """Drives a :class:`~repro.serving.engine.ServeEngine` over a
     request stream: admit-then-step until the queue drains.
 
-    Invalid requests (see :class:`AdmissionError`) are *counted and
-    dropped* at admission (``self.dropped``) instead of killing the
-    whole replay: one bad request in a trace must not abort the
-    benchmark run.
+    Failure accounting is split by cause (DESIGN.md §12) so replay
+    reports distinguish operator error from load shedding from fault
+    handling:
+
+    * ``dropped_admission`` — malformed requests (:class:`AdmissionError`:
+      over-long prompt/generation, bad tenant id) — operator error;
+    * ``shed_deadline`` — requests whose TTFT deadline was already blown
+      when they reached the head of the queue, shed *before* prefill
+      (no device work spent on an answer that is already late);
+    * ``failed_quarantine`` — requests for a quarantined tenant
+      (:class:`QuarantineError`), refused so a poisoned adapter cannot
+      re-enter the batch;
+    * ``failed`` — requests that terminated in flight with a typed
+      :class:`RequestError` (non-finite logits, kernel failure, watchdog
+      /total-deadline cancellation), returned by the engine.
+
+    ``dropped`` aggregates the first three (back-compat: everything shed
+    at admission time); one bad request in a trace must never abort the
+    replay, while a bare ``ValueError`` out of ``admit`` still does (an
+    engine invariant violation must not be masked as shed load).
+
+    Deadlines and the watchdog only act under a *real* clock: the
+    ``float('inf')`` as-fast-as-possible benchmark clock makes every
+    deadline vacuously blown, so SLO enforcement is disabled there.
 
     Tier-affinity admission (DESIGN.md §11): when the engine reports a
     *preferred* tenant — the most common hot-tier tenant among in-flight
@@ -163,32 +248,67 @@ class Scheduler:
     and never an idle slot).  As other slots retire, the batch converges
     to a single hot tenant and the engine's merged-tier step takes over;
     with no hot tenants (uniform traffic, or ``merged_capacity=0``)
-    ``preferred_tenant`` is always None and admission is plain FCFS."""
+    ``preferred_tenant`` is always None and admission is plain FCFS.
+    Under back-pressure (head tenant's bank slot unacquirable) the same
+    bounded lookahead fills the free slot with the first admissible
+    ready request instead of idling it (:meth:`FCFSQueue.pop_admissible`).
+    """
 
     def __init__(self, engine, *, max_admits_per_tick: Optional[int] = None,
-                 affinity_lookahead: Optional[int] = None):
+                 affinity_lookahead: Optional[int] = None,
+                 watchdog_s: Optional[float] = None):
         self.engine = engine
         self.max_admits = max_admits_per_tick or engine.slots
         self.affinity_lookahead = (4 * engine.slots
                                    if affinity_lookahead is None
                                    else affinity_lookahead)
-        self.dropped: list[Request] = []
-        self.stats = dict(affinity_admissions=0)
+        # stuck/runaway-slot guard: cancel any request in flight longer
+        # than this many (real-clock) seconds.  None disables.
+        self.watchdog_s = watchdog_s
+        self.dropped_admission: list[Request] = []
+        self.shed_deadline: list[Request] = []
+        self.failed_quarantine: list[Request] = []
+        self.failed: list[Request] = []
+        self.stats = dict(affinity_admissions=0,
+                          backpressure_admissions=0, watchdog_cancels=0)
+
+    @property
+    def dropped(self) -> list[Request]:
+        """Everything shed at admission time (union of the three
+        admission-side accounting buckets), in shed order."""
+        return sorted(self.dropped_admission + self.shed_deadline
+                      + self.failed_quarantine, key=lambda r: r.rid)
+
+    def accounting(self) -> dict[str, int]:
+        """Failure accounting for the last replay, split by cause."""
+        return dict(
+            dropped_admission=len(self.dropped_admission),
+            shed_deadline=len(self.shed_deadline),
+            failed_quarantine=len(self.failed_quarantine),
+            failed_inflight=len(self.failed),
+            watchdog_cancels=self.stats["watchdog_cancels"])
 
     def run(self, requests, *, clock: Optional[Callable[[], float]] = None
             ) -> list[Request]:
-        """Replay ``requests``; returns them completed, in finish order.
+        """Replay ``requests``; returns the healthily-completed ones in
+        finish order (requests that terminated with a typed error are in
+        ``self.failed``; admission-side sheds in ``self.dropped_*``).
 
         ``clock`` defaults to wall time since the call started, which
         makes Poisson arrival offsets real pacing; pass e.g.
         ``lambda: float('inf')`` to replay as-fast-as-possible (every
-        request immediately ready — the saturation/benchmark mode).
+        request immediately ready — the saturation/benchmark mode;
+        deadlines and the watchdog are disabled under it).
 
-        ``self.dropped`` describes THIS replay: it is reset here, so
-        read it after ``run`` returns and before the next call.
+        The accounting lists describe THIS replay: they are reset here,
+        so read them after ``run`` returns and before the next call.
         """
-        self.dropped = []
-        self.stats = dict(affinity_admissions=0)
+        self.dropped_admission = []
+        self.shed_deadline = []
+        self.failed_quarantine = []
+        self.failed = []
+        self.stats = dict(affinity_admissions=0,
+                          backpressure_admissions=0, watchdog_cancels=0)
         queue = FCFSQueue(requests)
         t0 = time.perf_counter()
         self.engine.start_clock(t0)    # request timestamps share origin
@@ -196,8 +316,9 @@ class Scheduler:
             lambda: time.perf_counter() - t0)
         done: list[Request] = []
         prefer_fn = getattr(self.engine, "preferred_tenant", lambda: None)
-        is_hot = getattr(getattr(self.engine, "registry", None),
-                         "is_merged", None)
+        registry = getattr(self.engine, "registry", None)
+        is_hot = getattr(registry, "is_merged", None)
+        is_quarantined = getattr(registry, "is_quarantined", None)
 
         def prefer():
             p = prefer_fn()
@@ -208,35 +329,74 @@ class Scheduler:
                                    self.affinity_lookahead)
             return p
 
+        def collect(finished):
+            for req in finished:
+                (done if req.ok else self.failed).append(req)
+
         while len(queue) or self.engine.n_active:
             admitted = 0
             while admitted < self.max_admits and self.engine.n_free:
                 p = prefer()
-                req = queue.pop_ready(now(), prefer=p,
+                tnow = now()
+                req = queue.pop_ready(tnow, prefer=p,
                                       lookahead=self.affinity_lookahead)
                 if req is None:
                     break
+                if (req.deadline_ttft_s is not None
+                        and tnow != float("inf")
+                        and tnow > req.arrival_s + req.deadline_ttft_s):
+                    # shed-before-prefill: the TTFT deadline is already
+                    # blown, so prefilling would spend device work on an
+                    # answer the caller has given up on
+                    req.error = RequestError(
+                        "deadline",
+                        f"ttft deadline blown before prefill "
+                        f"({tnow - req.arrival_s:.3f}s > "
+                        f"{req.deadline_ttft_s:.3f}s)")
+                    self.shed_deadline.append(req)
+                    continue
+                if is_quarantined is not None and \
+                        is_quarantined(req.tenant_id):
+                    req.error = RequestError(
+                        "quarantine",
+                        f"tenant {req.tenant_id} is quarantined")
+                    self.failed_quarantine.append(req)
+                    continue
                 if not self.engine.can_admit(req):
-                    # back-pressure: every resident tenant's bank slot
-                    # is pinned by in-flight requests — this (distinct)
-                    # tenant waits its FCFS turn until one retires
+                    # back-pressure: this tenant's bank slot is pinned
+                    # by in-flight requests — it waits its FCFS turn,
+                    # but the free decode slot must not idle if a
+                    # later-queued admissible request is ready
                     queue.requeue(req)
-                    break
+                    req = queue.pop_admissible(tnow, self.engine.can_admit,
+                                               self.affinity_lookahead)
+                    if req is None:
+                        break
+                    self.stats["backpressure_admissions"] += 1
                 try:
-                    done.extend(self.engine.admit(req))
+                    collect(self.engine.admit(req))
                 except AdmissionError:
                     # rejected at admission (engine.admit leaks neither
                     # slots nor registry pins on a raise); keep serving.
                     # Only AdmissionError is shed — a bare ValueError
                     # out of admit is an engine/registry invariant
                     # violation and must abort the replay.
-                    self.dropped.append(req)
+                    self.dropped_admission.append(req)
+                    continue
+                except QuarantineError:
+                    # tenant was quarantined between the check above and
+                    # acquire (e.g. by a concurrent slot failure)
+                    req.error = RequestError(
+                        "quarantine",
+                        f"tenant {req.tenant_id} is quarantined")
+                    self.failed_quarantine.append(req)
                     continue
                 admitted += 1
                 if p is not None and req.tenant_id == p:
                     self.stats["affinity_admissions"] += 1
             if self.engine.n_active:
-                done.extend(self.engine.step())
+                collect(self.engine.step())
+                self._watchdog(now())
             elif len(queue):
                 # idle: nothing in flight, next arrival in the future
                 nxt = queue.next_arrival()
@@ -245,6 +405,33 @@ class Scheduler:
                     time.sleep(min(wait, 0.05))
         return done
 
+    def _watchdog(self, tnow: float) -> None:
+        """Cancel stuck/runaway slots: any in-flight request older than
+        ``watchdog_s`` (a slot that stopped making timely progress —
+        injected stragglers, a wedged kernel) or past its total
+        deadline.  Disabled under the ``inf`` benchmark clock."""
+        if tnow == float("inf"):
+            return
+        inflight = getattr(self.engine, "inflight", None)
+        if inflight is None:
+            return
+        for slot, req in list(inflight().items()):
+            age = tnow - (req.admit_s if req.admit_s is not None else tnow)
+            if self.watchdog_s is not None and age > self.watchdog_s:
+                err = RequestError(
+                    "watchdog", f"slot {slot} in flight {age:.3f}s > "
+                    f"watchdog {self.watchdog_s:.3f}s")
+            elif (req.deadline_total_s is not None
+                    and tnow > req.arrival_s + req.deadline_total_s):
+                err = RequestError(
+                    "deadline", f"total deadline blown in flight "
+                    f"({tnow - req.arrival_s:.3f}s > "
+                    f"{req.deadline_total_s:.3f}s)")
+            else:
+                continue
+            self.failed.append(self.engine.cancel(slot, err))
+            self.stats["watchdog_cancels"] += 1
+
 
 def synthetic_workload(n_requests: int, n_tenants: int, *, vocab: int,
                        rate_rps: Optional[float] = None, zipf_a: float = 1.1,
@@ -252,7 +439,10 @@ def synthetic_workload(n_requests: int, n_tenants: int, *, vocab: int,
                        gen_lens: tuple[int, int] = (4, 16),
                        seed: int = 0,
                        hot_permutation: Optional[int] = None,
-                       shift_hot_at: Optional[int] = None) -> list[Request]:
+                       shift_hot_at: Optional[int] = None,
+                       deadline_ttft_s: Optional[float] = None,
+                       deadline_total_s: Optional[float] = None
+                       ) -> list[Request]:
     """Poisson arrivals (``rate_rps`` requests/s; None = all at t=0)
     over a Zipf(``zipf_a``) tenant distribution.
 
@@ -268,6 +458,10 @@ def synthetic_workload(n_requests: int, n_tenants: int, *, vocab: int,
     arrival order), moving the hot set mid-trace — the tier-churn case
     (promotions of the new head, demotions of the old) that a static
     head can never exercise.
+
+    ``deadline_ttft_s`` / ``deadline_total_s`` stamp the same per-
+    request SLOs onto every request (None = no deadline — the default
+    keeps existing saturation replays deadline-free).
 
     When ``n_tenants`` exceeds the registry capacity the Zipf tail
     guarantees cold tenants arrive mid-traffic and force eviction."""
@@ -299,16 +493,63 @@ def synthetic_workload(n_requests: int, n_tenants: int, *, vocab: int,
             tenant_id=int(perm[rng.choice(n_tenants, p=probs)]),
             prompt=rng.integers(0, vocab, plen).astype(np.int32),
             max_new_tokens=int(rng.integers(gen_lens[0], gen_lens[1] + 1)),
-            arrival_s=float(arrivals[i])))
+            arrival_s=float(arrivals[i]),
+            deadline_ttft_s=deadline_ttft_s,
+            deadline_total_s=deadline_total_s))
     return out
 
 
-def summarize(completed: list[Request], *, dropped: int = 0) -> dict:
+def _slo_columns(completed: list[Request],
+                 scheduler: Optional[Scheduler]) -> dict:
+    """SLO-attainment fractions over deadline-bearing requests.  A
+    request counts as *attained* only if it completed healthily within
+    its deadline; requests shed/cancelled for that deadline (or failed
+    any other way) count as missed — attainment is measured against
+    everything the caller asked for, not just what survived."""
+    pools = [completed]
+    if scheduler is not None:
+        pools += [scheduler.failed, scheduler.shed_deadline,
+                  scheduler.failed_quarantine]
+    ttft_n = ttft_ok = total_n = total_ok = 0
+    for pool in pools:
+        for r in pool:
+            if r.deadline_ttft_s is not None:
+                ttft_n += 1
+                if (r.ok and r.first_token_s is not None
+                        and r.first_token_s - r.arrival_s
+                        <= r.deadline_ttft_s):
+                    ttft_ok += 1
+            if r.deadline_total_s is not None:
+                total_n += 1
+                if (r.ok and r.finish_s is not None
+                        and r.finish_s - r.arrival_s
+                        <= r.deadline_total_s):
+                    total_ok += 1
+    out = {}
+    if ttft_n:
+        out["slo_ttft_attained"] = ttft_ok / ttft_n
+    if total_n:
+        out["slo_total_attained"] = total_ok / total_n
+    return out
+
+
+def summarize(completed: list[Request], *, dropped: int = 0,
+              scheduler: Optional[Scheduler] = None) -> dict:
     """Aggregate serving metrics over a finished replay.  ``dropped``
     (typically ``len(scheduler.dropped)``) surfaces admission-rejected
-    requests so a replay that silently shed load is visible."""
+    requests so a replay that silently shed load is visible.  Pass the
+    ``scheduler`` to also get the split failure accounting
+    (:meth:`Scheduler.accounting`) and SLO-attainment columns, computed
+    over every deadline-bearing request the replay saw (shed and
+    cancelled requests count as missed)."""
+    extra: dict = {}
+    if scheduler is not None:
+        extra.update(scheduler.accounting())
+        if dropped == 0:
+            dropped = len(scheduler.dropped)
+    extra.update(_slo_columns(completed, scheduler))
     if not completed:
-        return dict(n_requests=0, n_dropped=int(dropped))
+        return dict(n_requests=0, n_dropped=int(dropped), **extra)
     toks = sum(len(r.tokens) for r in completed)
     t_first = min(r.admit_s for r in completed)
     t_last = max(r.finish_s for r in completed)
@@ -328,4 +569,5 @@ def summarize(completed: list[Request], *, dropped: int = 0) -> dict:
         ttft_p50_ms=float(np.percentile(ttft_ms, 50)),
         ttft_p95_ms=float(np.percentile(ttft_ms, 95)),
         span_s=span,
+        **extra,
     )

@@ -8,6 +8,13 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "chaos: fault-injected serving degradation tests (DESIGN.md §12); "
+        "run in isolation with `pytest -m chaos`")
+
+
 def run_subprocess(code: str, *, devices: int = 1, timeout: int = 300):
     """Run a python snippet in a fresh process with N fake CPU devices.
 

@@ -1,0 +1,484 @@
+"""Fault-injected serving: graceful degradation as properties
+(DESIGN.md §12).
+
+Every degradation path the tiered multi-tenant engine claims is
+exercised here via seeded :class:`FaultPlan` injection — corrupted
+(NaN/Inf) tenant adapters caught by the in-jit non-finite guard and
+quarantined, kernel raises retried then failed with typed outcomes,
+merge failures retried-with-backoff then fenced to the bank tier,
+stragglers shed/cancelled by deadlines + watchdog, eviction storms
+survived with pins respected — plus the host-boundary ``put``
+validation, the split failure accounting, and the back-pressure ×
+tier-affinity no-starvation/no-idle-slot property.  Every test asserts
+the fault actually fired (``FaultPlan.fired``), that every request ends
+in exactly one accounting bucket with a typed outcome, and that nothing
+retraced: degradation is bookkeeping, never a recompile.
+"""
+
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.transforms import PEFTConfig
+from repro.models import init_model
+from repro.models.backbone import ModelConfig
+from repro.serving import (AdapterRegistry, AdapterValidationError,
+                           ERROR_KINDS, FaultPlan, QuarantineError, Request,
+                           RequestError, Scheduler, ServeEngine, summarize,
+                           synthetic_workload)
+from repro.serving.faults import corrupt_tree
+
+pytestmark = pytest.mark.chaos
+
+RNG = jax.random.PRNGKey(0)
+
+# registry-only tests run against a bank over one tiny linear
+TINY_W = jax.random.normal(jax.random.fold_in(RNG, 9), (16, 16))
+TINY_PARAMS = {"q_proj": {"kernel": TINY_W}}
+TINY_PEFT = PEFTConfig(method="ether", n_blocks=4, targets="q_proj")
+
+# engine tests run a real (but minimal) decoder so logits flow
+CFG = ModelConfig(name="chaos-smoke", n_layers=1, d_model=32, n_heads=1,
+                  n_kv=1, d_ff=64, vocab=64, scan_layers=False)
+PEFT = PEFTConfig(method="ether", n_blocks=4, targets="q_proj",
+                  backend="jnp")
+PARAMS = init_model(RNG, CFG)
+
+INF = lambda: float("inf")                                     # noqa: E731
+
+
+def tiny_reg(capacity=3, **kw):
+    return AdapterRegistry(TINY_PARAMS, TINY_PEFT, capacity, n_tenants=8,
+                           rng=RNG, **kw)
+
+
+def build(faults=None, *, slots=2, capacity=3, n_tenants=8, gen=4, **reg_kw):
+    reg = AdapterRegistry(PARAMS, PEFT, capacity, n_tenants=n_tenants,
+                          rng=jax.random.fold_in(RNG, 1), faults=faults,
+                          **reg_kw)
+    eng = ServeEngine(CFG, PARAMS, reg, PEFT, slots=slots,
+                      prompt_buckets=(8,), max_new_tokens=gen, faults=faults)
+    return reg, eng
+
+
+def workload(n=6, tenants=4, seed=0, **kw):
+    return synthetic_workload(n, tenants, vocab=CFG.vocab, rate_rps=None,
+                              prompt_lens=(3, 8), gen_lens=(2, 4), seed=seed,
+                              **kw)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: seeded schedules, typed outcomes (pure host-side units)
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_sample_deterministic_and_validated():
+    a, b = FaultPlan.sample(7), FaultPlan.sample(7)
+    assert a == b                          # fired excluded from equality
+    assert (a.corrupt_adapters and a.kernel_raise_at and a.merge_fail
+            and a.slow_steps and a.evict_storm_at)
+    assert FaultPlan.sample(8) != a
+    only = FaultPlan.sample(7, classes=("kernel",))
+    assert only.kernel_raise_at and not (
+        only.corrupt_adapters or only.merge_fail or only.slow_steps
+        or only.evict_storm_at)
+    with pytest.raises(ValueError, match="unknown fault classes"):
+        FaultPlan.sample(0, classes=("gremlins",))
+    perm = FaultPlan.sample(3, persistent_merge_failure=True)
+    assert set(perm.merge_fail.values()) == {10 ** 9}
+
+
+def test_corrupt_tree_minimal_poison_float_leaves_only():
+    tree = {"m": {"u": np.ones((2, 3), np.float32),
+                  "idx": np.arange(3, dtype=np.int32)}}
+    bad = corrupt_tree(tree, "nan")
+    flat = np.asarray(bad["m"]["u"]).ravel()
+    assert np.isnan(flat[0]) and np.isfinite(flat[1:]).all()
+    np.testing.assert_array_equal(np.asarray(bad["m"]["idx"]),
+                                  tree["m"]["idx"])   # int leaf untouched
+    assert np.isinf(np.asarray(corrupt_tree(tree, "inf")["m"]["u"])
+                    .ravel()[0])
+    with pytest.raises(ValueError, match="nan"):
+        corrupt_tree(tree, "zero")
+
+
+def test_request_error_kinds_are_typed():
+    for kind in ERROR_KINDS:
+        assert RequestError(kind).kind == kind
+    with pytest.raises(ValueError, match="unknown RequestError kind"):
+        RequestError("oom")
+
+
+# ---------------------------------------------------------------------------
+# put validation (host boundary) + rehabilitation
+# ---------------------------------------------------------------------------
+
+def test_put_validates_structure_shape_dtype_finiteness():
+    reg = tiny_reg()
+    good = jax.tree_util.tree_map(np.asarray, reg.adapters_for(0))
+    reg.put(0, good)                       # a valid tree round-trips
+    with pytest.raises(AdapterValidationError, match="modules"):
+        reg.put(0, {"bogus": good["q_proj"]})
+    mod = next(iter(good))
+    with pytest.raises(AdapterValidationError, match="leaves"):
+        reg.put(0, {mod: dict(good[mod],
+                              extra=np.zeros(3, np.float32))})
+    with pytest.raises(AdapterValidationError, match="shape"):
+        reg.put(0, {mod: {k: v[..., None] for k, v in good[mod].items()}})
+    with pytest.raises(AdapterValidationError, match="dtype"):
+        reg.put(0, jax.tree_util.tree_map(
+            lambda v: v.astype(np.float64), good))
+    with pytest.raises(AdapterValidationError, match="non-finite"):
+        reg.put(0, jax.tree_util.tree_map(
+            lambda v: np.full_like(v, np.nan), good))
+    # nothing above mutated the store: the original tree still serves
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree_util.tree_leaves(reg.adapters_for(0))[0]),
+        np.asarray(jax.tree_util.tree_leaves(good)[0]))
+
+
+def test_put_rehabilitates_quarantine_and_merge_fence():
+    plan = FaultPlan(merge_fail={1: 10 ** 9})
+    reg = tiny_reg(merged_capacity=1, promote_after=1, demote_below=0, window=4,
+                   min_dwell=0, merge_retries=1, faults=plan)
+    good = jax.tree_util.tree_map(np.asarray, reg.adapters_for(1))
+    reg.acquire(1)
+    reg.release(1)                         # promotion attempt → fenced
+    assert 1 in reg.merge_fenced() and reg.stats["merge_failures"] == 1
+    reg.mark_suspect(1)
+    assert reg.is_quarantined(1)
+    with pytest.raises(QuarantineError, match="quarantined"):
+        reg.acquire(1)
+    reg.put(1, good)                       # fresh validated upload
+    assert not reg.is_quarantined(1) and 1 not in reg.merge_fenced()
+    assert reg.acquire(1) >= 0             # serves again
+    reg.release(1)
+
+
+# ---------------------------------------------------------------------------
+# quarantine lifecycle: pins respected, bank row scrubbed to identity
+# ---------------------------------------------------------------------------
+
+def test_quarantine_eviction_deferred_past_last_pin_and_scrubbed():
+    reg = tiny_reg()
+    slot = reg.acquire(2)
+    reg.acquire(2)                         # two in-flight pins
+    reg.mark_suspect(2)
+    assert reg.is_quarantined(2)
+    assert 2 in reg.resident()             # deferred: pins respected
+    reg.release(2)
+    assert 2 in reg.resident()             # one sibling still in flight
+    reg.release(2)                         # last pin → two-tier eviction
+    assert 2 not in reg.resident()
+    assert reg.stats["quarantine_evictions"] == 1
+    # the freed row is zeros — identity adapters under any gather; a
+    # NaN row is the one stale value masking can't neutralize (0*NaN)
+    for leaf in jax.tree_util.tree_leaves(reg.bank.select(slot)):
+        assert np.all(np.asarray(leaf) == 0)
+
+
+def test_eviction_storm_flush_respects_pins_both_tiers():
+    reg = tiny_reg(merged_capacity=2, promote_after=1, demote_below=0,
+                   window=8, min_dwell=0)
+    reg.acquire(0)                         # pinned (in flight) + merged
+    reg.acquire(1)
+    reg.release(1)                         # unpinned resident + merged
+    assert reg.is_merged(0) and reg.is_merged(1)
+    n = reg.flush_unpinned()
+    assert n == 2                          # tenant 1: merged + bank row
+    assert 0 in reg.resident() and reg.is_merged(0)
+    assert 1 not in reg.resident() and not reg.is_merged(1)
+    assert reg.stats["storm_flushes"] == 1
+    reg.release(0)
+
+
+# ---------------------------------------------------------------------------
+# merge failures: bounded retry, then fence to the bank tier
+# ---------------------------------------------------------------------------
+
+def test_merge_transient_failure_recovered_by_retry():
+    plan = FaultPlan(merge_fail={5: 1})    # exactly one failed dispatch
+    reg = tiny_reg(merged_capacity=1, promote_after=1, demote_below=0, window=4,
+                   min_dwell=0, merge_retries=2, faults=plan)
+    reg.acquire(5)
+    reg.release(5)
+    assert reg.is_merged(5)                # the retry's merge succeeded
+    assert reg.stats["merge_retries"] == 1
+    assert reg.stats["merge_failures"] == 0
+    assert plan.fired == {"merge:5": 1}
+
+
+def test_merge_permanent_failure_fences_tenant_to_bank_tier():
+    plan = FaultPlan(merge_fail={6: 10 ** 9})
+    reg = tiny_reg(merged_capacity=1, promote_after=1, demote_below=0, window=4,
+                   min_dwell=0, merge_retries=1, faults=plan)
+    reg.acquire(6)
+    reg.release(6)
+    assert not reg.is_merged(6) and 6 in reg.merge_fenced()
+    assert reg.stats["merge_failures"] == 1
+    assert reg.stats["merge_retries"] == 1
+    assert plan.fired["merge:6"] == 2      # initial + one retry
+    reg.acquire(6)                         # keeps serving from the bank
+    reg.release(6)
+    assert 6 in reg.resident() and not reg.is_merged(6)
+    assert reg.promote(6) is False         # never re-promoted while fenced
+    assert reg.stats["merges_skipped"] == 1
+
+
+# ---------------------------------------------------------------------------
+# corrupt adapters: in-jit non-finite guard → quarantine, end to end
+# ---------------------------------------------------------------------------
+
+def test_corrupt_tenants_quarantined_end_to_end():
+    plan = FaultPlan(corrupt_adapters={1: "nan", 3: "inf"})
+    reg, eng = build(faults=plan)
+    snap = eng.warmup()
+    reqs = [Request(rid=i, tenant_id=i % 4,
+                    prompt=np.full(4, i + 1, np.int32), max_new_tokens=3)
+            for i in range(8)]
+    sched = Scheduler(eng)
+    done = sched.run(copy.deepcopy(reqs), clock=INF)
+    eng.assert_no_retrace(snap)            # degradation never recompiles
+    # healthy tenants (0, 2) unaffected by their poisoned batchmates:
+    # batched decode is slot-independent, so NaN cannot cross slots
+    assert sorted(r.rid for r in done) == [0, 2, 4, 6]
+    assert all(len(r.tokens) == 3 for r in done)
+    # first request per poisoned tenant: typed nonfinite outcome
+    assert sorted(r.rid for r in sched.failed) == [1, 3]
+    assert all(r.error.kind == "nonfinite" for r in sched.failed)
+    # later requests of a quarantined tenant are shed before prefill
+    assert sorted(r.rid for r in sched.failed_quarantine) == [5, 7]
+    assert all(r.error.kind == "quarantine"
+               for r in sched.failed_quarantine)
+    assert reg.quarantined() == frozenset({1, 3})
+    assert reg.stats["quarantine_evictions"] == 2
+    assert plan.summary()["corrupt"] >= 2  # both poisons actually fired
+    acc = sched.accounting()
+    assert acc["failed_inflight"] == 2 and acc["failed_quarantine"] == 2
+    assert eng.n_free == eng.slots         # nothing leaked
+
+
+def test_nonfinite_caught_at_prefill_for_one_token_request():
+    plan = FaultPlan(corrupt_adapters={2: "nan"})
+    reg, eng = build(faults=plan)
+    eng.warmup()
+    out = eng.admit(Request(rid=0, tenant_id=2,
+                            prompt=np.arange(1, 5, dtype=np.int32),
+                            max_new_tokens=1))
+    assert len(out) == 1 and out[0].error.kind == "nonfinite"
+    assert out[0].tokens == []             # no garbage first token
+    assert reg.is_quarantined(2)
+    assert eng.n_free == eng.slots
+
+
+# ---------------------------------------------------------------------------
+# kernel failures: bounded retry, then typed batch failure
+# ---------------------------------------------------------------------------
+
+def test_kernel_transient_failure_recovered_by_retry():
+    plan = FaultPlan(kernel_raise_at=frozenset({1}))
+    reg, eng = build(faults=plan)
+    snap = eng.warmup()
+    sched = Scheduler(eng)
+    done = sched.run(workload(), clock=INF)
+    eng.assert_no_retrace(snap)
+    assert len(done) == 6 and not sched.failed
+    assert eng.fault_stats["step_retries"] == 1
+    assert eng.fault_stats["step_failures"] == 0
+    assert plan.fired == {"kernel:1": 1}   # the retry's hook didn't fire
+
+
+def test_kernel_persistent_failure_fails_batch_with_typed_outcomes():
+    plan = FaultPlan(kernel_raise_at=frozenset({1}),
+                     kernel_persistent=True)
+    reg, eng = build(faults=plan)
+    snap = eng.warmup()
+    sched = Scheduler(eng)
+    done = sched.run(workload(), clock=INF)
+    eng.assert_no_retrace(snap)
+    assert eng.fault_stats["step_failures"] == 1
+    assert plan.fired["kernel:1"] == 1 + eng.step_retries
+    assert sched.failed
+    assert all(r.error.kind == "kernel" and r.error.step == 1
+               for r in sched.failed)
+    # one bad step costs its batch, never the replay: the engine stayed
+    # serviceable and the rest of the queue completed
+    assert done and len(done) + len(sched.failed) == 6
+    assert eng.n_free == eng.slots
+
+
+# ---------------------------------------------------------------------------
+# eviction storms: survive re-onboarding churn mid-replay
+# ---------------------------------------------------------------------------
+
+def test_eviction_storm_mid_replay_serves_through():
+    plan = FaultPlan(evict_storm_at=frozenset({1, 3}))
+    reg, eng = build(faults=plan, merged_capacity=2, promote_after=2,
+                     window=16, min_dwell=0)
+    snap = eng.warmup()
+    sched = Scheduler(eng)
+    done = sched.run(workload(10, seed=1), clock=INF)
+    eng.assert_no_retrace(snap)            # re-onboarding never retraces
+    assert len(done) == 10 and not sched.failed and not sched.dropped
+    assert reg.stats["storm_flushes"] == 2
+    assert plan.summary() == {"evict_storm": 2}
+
+
+# ---------------------------------------------------------------------------
+# stragglers: deadlines + watchdog (real clock)
+# ---------------------------------------------------------------------------
+
+def test_straggler_blows_total_deadline_and_is_cancelled():
+    plan = FaultPlan(slow_steps={1: 0.3})
+    reg, eng = build(faults=plan)
+    snap = eng.warmup()
+    wl = synthetic_workload(4, 4, vocab=CFG.vocab, rate_rps=None,
+                            prompt_lens=(3, 8), gen_lens=(4, 4), seed=0,
+                            deadline_total_s=0.2)
+    sched = Scheduler(eng, watchdog_s=10.0)
+    done = sched.run(wl)                   # real clock: deadlines active
+    eng.assert_no_retrace(snap)
+    assert plan.summary() == {"straggler": 1}
+    assert sched.stats["watchdog_cancels"] >= 1
+    assert sched.failed
+    assert all(r.error.kind == "deadline" for r in sched.failed)
+    assert len(done) + len(sched.failed) + len(sched.dropped) == 4
+    s = summarize(done, scheduler=sched)
+    assert s["slo_total_attained"] < 1.0   # misses counted against SLO
+    assert s["watchdog_cancels"] == sched.stats["watchdog_cancels"]
+
+
+def test_watchdog_cancels_stuck_slots_without_deadlines():
+    plan = FaultPlan(slow_steps={1: 0.25})
+    reg, eng = build(faults=plan, gen=6)
+    eng.warmup()
+    reqs = [Request(rid=i, tenant_id=i, prompt=np.full(4, i + 1, np.int32),
+                    max_new_tokens=6) for i in range(2)]
+    sched = Scheduler(eng, watchdog_s=0.1)
+    done = sched.run(reqs)
+    assert not done and sched.stats["watchdog_cancels"] == 2
+    assert all(r.error.kind == "watchdog" for r in sched.failed)
+    assert eng.fault_stats["cancels"] == 2
+    assert eng.n_free == eng.slots
+
+
+def test_blown_ttft_deadline_sheds_before_prefill():
+    reg, eng = build()
+    eng.warmup()
+    reqs = [Request(rid=0, tenant_id=0, prompt=np.full(4, 1, np.int32),
+                    max_new_tokens=3, deadline_ttft_s=-1.0),
+            Request(rid=1, tenant_id=1, prompt=np.full(4, 2, np.int32),
+                    max_new_tokens=3)]
+    sched = Scheduler(eng)
+    done = sched.run(reqs)                 # real clock
+    assert [r.rid for r in done] == [1]
+    assert [r.rid for r in sched.shed_deadline] == [0]
+    assert sched.shed_deadline[0].error.kind == "deadline"
+    # shed-before-prefill: tenant 0 never touched the device
+    assert 0 not in reg.resident()
+    assert sched.shed_deadline[0].tokens == []
+
+
+def test_inf_benchmark_clock_disables_slo_enforcement():
+    """Saturation replays (clock=inf) make every deadline vacuously
+    blown — SLO shedding and the watchdog must be inert there."""
+    reg, eng = build()
+    eng.warmup()
+    wl = workload(4, deadline_ttft_s=-1.0, deadline_total_s=0.0)
+    sched = Scheduler(eng, watchdog_s=0.0)
+    done = sched.run(wl, clock=INF)
+    assert len(done) == 4 and not sched.failed and not sched.dropped
+
+
+def test_cancel_unknown_slot_raises():
+    reg, eng = build()
+    eng.warmup()
+    with pytest.raises(ValueError, match="no in-flight"):
+        eng.cancel(0, RequestError("watchdog"))
+
+
+# ---------------------------------------------------------------------------
+# failure accounting: split by cause, union preserved
+# ---------------------------------------------------------------------------
+
+def test_failure_accounting_split_by_cause():
+    reg, eng = build()
+    eng.warmup()
+    reg.adapters_for(3)
+    reg.mark_suspect(3)                    # pre-quarantined tenant
+    reqs = [
+        Request(rid=0, tenant_id=0, prompt=np.full(4, 1, np.int32),
+                max_new_tokens=2),
+        Request(rid=1, tenant_id=1, prompt=np.zeros(99, np.int32),
+                max_new_tokens=2),                 # malformed: no bucket
+        Request(rid=2, tenant_id=2, prompt=np.full(4, 2, np.int32),
+                max_new_tokens=2, deadline_ttft_s=-1.0),  # already late
+        Request(rid=3, tenant_id=3, prompt=np.full(4, 3, np.int32),
+                max_new_tokens=2),                 # quarantined tenant
+    ]
+    sched = Scheduler(eng)
+    done = sched.run(reqs)                 # real clock: the shed fires
+    assert [r.rid for r in done] == [0]
+    assert [r.rid for r in sched.dropped_admission] == [1]
+    assert [r.rid for r in sched.shed_deadline] == [2]
+    assert [r.rid for r in sched.failed_quarantine] == [3]
+    assert [r.rid for r in sched.dropped] == [1, 2, 3]   # back-compat union
+    assert sched.accounting() == dict(
+        dropped_admission=1, shed_deadline=1, failed_quarantine=1,
+        failed_inflight=0, watchdog_cancels=0)
+    s = summarize(done, scheduler=sched)
+    assert s["n_dropped"] == 3 and s["slo_ttft_attained"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# back-pressure × tier-affinity: no starvation, no idle slot
+# ---------------------------------------------------------------------------
+
+def test_backpressure_fills_free_slots_without_starving_blocked_head():
+    """capacity-1 bank, 2 decode slots: while tenant 0's request pins
+    the only bank slot, the queue head (a distinct tenant) is blocked —
+    but later-queued requests of the *resident* tenant must fill the
+    idle decode slot, and the blocked head must still complete once the
+    pin drops (bounded delay, never starvation)."""
+    reg, eng = build(slots=2, capacity=1, n_tenants=4, gen=4)
+    snap = eng.warmup()
+    reqs = [Request(rid=0, tenant_id=0, prompt=np.full(4, 1, np.int32),
+                    max_new_tokens=4),
+            Request(rid=1, tenant_id=1, prompt=np.full(4, 2, np.int32),
+                    max_new_tokens=2),     # blocked head (distinct tenant)
+            Request(rid=2, tenant_id=0, prompt=np.full(4, 3, np.int32),
+                    max_new_tokens=2),
+            Request(rid=3, tenant_id=0, prompt=np.full(4, 4, np.int32),
+                    max_new_tokens=2)]
+    sched = Scheduler(eng)
+    done = sched.run(copy.deepcopy(reqs), clock=INF)
+    eng.assert_no_retrace(snap)
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3]  # no starvation
+    assert not sched.dropped and not sched.failed
+    assert sched.stats["backpressure_admissions"] >= 1  # no idle slot
+    assert all(len(r.tokens) == r.max_new_tokens for r in done)
+
+
+# ---------------------------------------------------------------------------
+# sampled multi-class chaos replay: full accounting, zero retraces
+# ---------------------------------------------------------------------------
+
+def test_sampled_chaos_replay_full_accounting():
+    """One seeded plan drawing from every fault class through one
+    replay: every request ends in exactly one bucket with a typed
+    outcome, at least one injection fired, and nothing retraced."""
+    plan = FaultPlan.sample(5, n_steps=12, tenants=6, slow_s=0.005)
+    reg, eng = build(faults=plan, n_tenants=6, merged_capacity=2,
+                     promote_after=2, window=16, min_dwell=0)
+    snap = eng.warmup()
+    wl = workload(12, tenants=6, seed=5)
+    sched = Scheduler(eng)
+    done = sched.run(copy.deepcopy(wl), clock=INF)
+    eng.assert_no_retrace(snap)
+    assert len(done) + len(sched.failed) + len(sched.dropped) == 12
+    for r in (sched.failed + sched.shed_deadline
+              + sched.failed_quarantine):
+        assert r.error is not None and r.error.kind in ERROR_KINDS
+    assert plan.fired                      # injections actually happened
+    assert eng.n_free == eng.slots
