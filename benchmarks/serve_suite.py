@@ -58,6 +58,20 @@ pallas), five row kinds over the smoke serving model:
     replay per injected fault class, each completing with typed
     per-request outcomes, full accounting, zero retraces, and bounded
     wall-clock overhead vs a healthy twin (``derived``).
+``serve_journal_overhead`` (what=wal)
+    The full replay with the write-ahead journal + durable store
+    attached (DESIGN.md §13) vs an unjournaled twin at identical grid +
+    workload — interleaved pairs like the guard gate; payload
+    ``derived['journal_vs_plain_<backend>']`` records the low-quantile
+    pair ratio (acceptance: ≤ 1.05 on the jnp serving grid — crash
+    safety is near-free on the healthy path).
+``serve_recovery`` (what=warm_restart)
+    Kill-and-restore drill as a tracked number: a scheduled
+    SimulatedCrash kills a journaled replay mid-trace, a fresh engine
+    recovers (membership rebuilt, in-flight resumed as extended
+    prefills) and finishes it with exactly-one-bucket accounting and
+    zero retraces; ``us_per_call`` is the measured restart RTO (engine
+    start → first resumed token).
 
 Honest labeling off-TPU mirrors kernels_suite: the pallas backend runs
 the interpret-mode emulator there, so pallas rows are timed at the tiny
@@ -79,7 +93,8 @@ ROW_OPS = ("serve_trace", "serve_decode_step", "serve_prefill_slot",
            "tenant_churn", "serve_merged_step", "serve_trace_mamba2",
            "serve_trace_rglru", "serve_trace_hybrid",
            "serve_trace_tiered", "serve_trace_bank", "serve_hot_step",
-           "serve_guard_overhead", "serve_trace_degraded")
+           "serve_guard_overhead", "serve_trace_degraded",
+           "serve_journal_overhead", "serve_recovery")
 
 SERVE_SHAPES = {
     "serving": dict(slots=8, buckets=(16, 32), gen=16, capacity=16,
@@ -142,7 +157,8 @@ def _family_archs():
     )
 
 
-def _build(backend: str, grid: dict, cfg=None, targets=None, faults=None):
+def _build(backend: str, grid: dict, cfg=None, targets=None, faults=None,
+           store=None, journal=None):
     from repro.configs import get_config, peft_targets
     from repro.core.transforms import PEFTConfig
     from repro.models import init_model
@@ -159,11 +175,13 @@ def _build(backend: str, grid: dict, cfg=None, targets=None, faults=None):
     registry = AdapterRegistry(params, peft, grid["capacity"],
                                n_tenants=grid["universe"],
                                rng=jax.random.fold_in(rng, 1),
-                               faults=faults, **policy)
+                               faults=faults, store=store,
+                               journal=journal, **policy)
     engine = ServeEngine(cfg, params, registry, peft,
                          slots=grid["slots"],
                          prompt_buckets=grid["buckets"],
-                         max_new_tokens=grid["gen"], faults=faults)
+                         max_new_tokens=grid["gen"], faults=faults,
+                         journal=journal)
     return cfg, peft, params, registry, engine
 
 
@@ -479,6 +497,136 @@ def _degraded_entries(backend: str, mode: str, grid: dict, cfg,
     return rows
 
 
+def _crash_safety_entries(backend: str, mode: str, grid: dict, cfg,
+                          derived: dict) -> list[dict]:
+    """Crash-safe serving rows (DESIGN.md §13).
+
+    ``serve_journal_overhead``: the full churning replay with the
+    write-ahead journal + durable store attached vs an unjournaled twin
+    — interleaved pairs, low-quantile ratio (same one-sided-gate
+    rationale as the guard pair in ``_paired_us``).
+
+    ``serve_recovery``: a scheduled crash (SimulatedCrash at a mid-trace
+    engine step, ``fsync_every=1`` so the journal is complete at death)
+    kills a journaled replay; a FRESH registry/engine recovers over the
+    same disk and finishes the trace.  The row is gated on the drill
+    actually working: crash fired, in-flight requests resumed, every
+    workload rid in exactly one accounting bucket, zero retraces.
+    ``us_per_call`` is the measured restart RTO."""
+    import copy
+    import os
+    import shutil
+    import tempfile
+
+    from repro.serving import (AdapterStore, Journal, Scheduler,
+                               SimulatedCrash, recover, summarize)
+    from repro.serving.faults import FaultPlan
+
+    inf_clock = lambda: float("inf")                    # noqa: E731
+    rows = []
+
+    # --- WAL overhead: journaled vs plain twin ------------------------
+    jroot = tempfile.mkdtemp(prefix="bench_wal_")
+    try:
+        store = AdapterStore(os.path.join(jroot, "adapters"))
+        journal = Journal(os.path.join(jroot, "journal.jsonl"),
+                          fsync_every=32)
+        _, _, _, jreg, jeng = _build(backend, grid, store=store,
+                                     journal=journal)
+        _, _, _, preg, peng = _build(backend, grid)
+        snap_j, snap_p = jeng.warmup(), peng.warmup()
+        workload = _workload(grid, cfg)
+        best = None
+        ratios = []
+        for _ in range(8 if backend == "jnp" else 2):
+            cj = _one_replay("serve_journal_overhead", grid, jreg, jeng,
+                             workload)
+            cp = _one_replay("serve_journal_overhead:plain", grid, preg,
+                             peng, workload)
+            if (best is None or cj["throughput_tok_s"]
+                    > best["throughput_tok_s"]):
+                best = cj
+            ratios.append(cp["throughput_tok_s"]
+                          / max(cj["throughput_tok_s"], 1e-9))
+        jeng.assert_no_retrace(snap_j)
+        peng.assert_no_retrace(snap_p)
+        journal.close()
+        derived[f"journal_vs_plain_{backend}"] = round(
+            sorted(ratios)[int(0.25 * (len(ratios) - 1))], 3)
+        rows.append(_row("serve_journal_overhead", backend, mode, grid,
+                         cfg, best, "wal"))
+    finally:
+        shutil.rmtree(jroot, ignore_errors=True)
+
+    # --- warm-restart RTO: crash mid-trace, recover, resume -----------
+    rroot = tempfile.mkdtemp(prefix="bench_recovery_")
+    try:
+        plan = FaultPlan(crash_at={"step": max(4, grid["requests"] // 2)})
+        store1 = AdapterStore(os.path.join(rroot, "adapters"),
+                              faults=plan)
+        journal1 = Journal(os.path.join(rroot, "journal.jsonl"),
+                           fsync_every=1, faults=plan)
+        _, _, _, reg1, eng1 = _build(backend, grid, faults=plan,
+                                     store=store1, journal=journal1)
+        eng1.warmup()
+        workload = _workload(grid, cfg)
+        try:
+            Scheduler(eng1).run(copy.deepcopy(workload), clock=inf_clock)
+        except SimulatedCrash:
+            pass
+        if "crash:step" not in plan.fired:
+            raise SystemExit("serve_recovery: the scheduled crash never "
+                             "fired — the drill measured nothing")
+        store2 = AdapterStore(os.path.join(rroot, "adapters"))
+        journal2 = Journal(os.path.join(rroot, "journal.jsonl"),
+                           fsync_every=1)
+        _, _, _, reg2, eng2 = _build(backend, grid, store=store2,
+                                     journal=journal2)
+        report = recover(journal2, reg2, eng2)
+        if not report.resume:
+            raise SystemExit("serve_recovery: nothing was in flight at "
+                             "the crash — no RTO to measure")
+        snap = eng2.warmup()
+        sched = Scheduler(eng2)
+        rest = [r for r in workload
+                if r.rid not in report.journaled_rids()]
+        done = sched.run(copy.deepcopy(rest), clock=inf_clock,
+                         resume=report.resume)
+        eng2.assert_no_retrace(snap)
+        journal2.close()
+        seen: dict[int, str] = {}
+        pools = dict(pre_completed=report.completed,
+                     pre_failed=report.failed, finished=done,
+                     failed=sched.failed, shed=sched.dropped)
+        for name, pool in pools.items():
+            for r in pool:
+                if r.rid in seen:
+                    raise SystemExit(f"serve_recovery: rid {r.rid} "
+                                     f"accounted twice ({seen[r.rid]} "
+                                     f"and {name})")
+                seen[r.rid] = name
+        if set(seen) != {r.rid for r in workload}:
+            raise SystemExit("serve_recovery: accounting does not cover "
+                             "the workload exactly once")
+        s = summarize(done, scheduler=sched)
+        rto = s.get("restart_rto_s")
+        if rto is None:
+            raise SystemExit("serve_recovery: requests resumed but no "
+                             "restart RTO was measured")
+        rows.append(dict(
+            op="serve_recovery", backend=backend, kind="decode",
+            what="warm_restart", mode=mode,
+            shape=dict(batch=grid["slots"], tokens=1, d=cfg.d_model),
+            us_per_call=round(rto * 1e6, 2),
+            n_resumed=len(report.resume),
+            recovered=s.get("recovered", 0),
+            pre_completed=len(report.completed),
+            journal_records=report.n_records))
+    finally:
+        shutil.rmtree(rroot, ignore_errors=True)
+    return rows
+
+
 def run_suite(shapes: str = "serving", include_interp: bool = False,
               iters: int | None = None) -> dict:
     """Time the serving rows per backend; returns the JSON payload.
@@ -630,6 +778,10 @@ def run_suite(shapes: str = "serving", include_interp: bool = False,
         # --- degraded-mode grid: one replay per fault class -----------
         entries += _degraded_entries(backend, mode, grid, cfg, derived)
 
+        # --- crash safety: WAL overhead + warm-restart RTO ------------
+        entries += _crash_safety_entries(backend, mode, grid, cfg,
+                                         derived)
+
         if shapes == "serving" and backend == "jnp":
             # acceptance contract (jnp rows, full grid only — the tiny
             # CI smoke gates on --compare instead, where the noise
@@ -657,6 +809,10 @@ def run_suite(shapes: str = "serving", include_interp: bool = False,
                    derived[f"degraded_overhead_{c}_jnp"] <= 3.0)
                   for c in ("corrupt", "kernel", "merge", "straggler",
                             "evict_storm")],
+                # DESIGN.md §13: the write-ahead journal must be
+                # near-free on the healthy path (batched fsync)
+                ("journal<=1.05x plain",
+                 derived["journal_vs_plain_jnp"] <= 1.05),
             ]
             failed = [name for name, ok in checks if not ok]
             if failed:

@@ -38,9 +38,9 @@ from repro.configs import get_config, peft_targets
 from repro.core.peft import AdapterBank, validate_tenant_ids
 from repro.core.transforms import PEFTConfig
 from repro.models import init_model
-from repro.serving import (AdapterRegistry, FaultPlan, Scheduler,
-                           ServeEngine, oracle_tokens, summarize,
-                           synthetic_workload)
+from repro.serving import (AdapterRegistry, AdapterStore, FaultPlan,
+                           Journal, Scheduler, ServeEngine, oracle_tokens,
+                           recover, summarize, synthetic_workload)
 
 
 def main():
@@ -69,6 +69,12 @@ def main():
                     help="inject a seeded FaultPlan (all fault classes, "
                          "DESIGN.md §12); the report adds failure "
                          "accounting with typed outcomes")
+    ap.add_argument("--journal-dir", default="",
+                    help="crash-safe serving: durable adapter store + "
+                         "write-ahead request journal (DESIGN.md §13)")
+    ap.add_argument("--restore", action="store_true",
+                    help="warm restart from --journal-dir: resume "
+                         "in-flight requests, replay the rest")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, "smoke")
@@ -90,20 +96,40 @@ def main():
     if args.chaos_seed is not None:
         faults = FaultPlan.sample(args.chaos_seed, n_steps=32,
                                   tenants=args.tenants)
+    store = journal = None
+    if args.journal_dir:
+        import os
+        store = AdapterStore(os.path.join(args.journal_dir, "adapters"),
+                             faults=faults)
+        journal = Journal(os.path.join(args.journal_dir,
+                                       "journal.jsonl"),
+                          fsync_every=1, faults=faults)
+    elif args.restore:
+        raise SystemExit("--restore requires --journal-dir")
     capacity = max(2, args.tenants // 4)
     registry = AdapterRegistry(params, peft, capacity,
                                n_tenants=args.tenants,
                                rng=jax.random.fold_in(rng, 1),
                                merged_capacity=args.merged_capacity,
                                promote_after=2, window=16, min_dwell=4,
-                               faults=faults)
+                               faults=faults, store=store,
+                               journal=journal)
     kb = registry.bank.size_bytes() / 1e3
     print(f"adapter bank: capacity {capacity} of {args.tenants} tenants "
           f"= {kb:.1f} KB HBM ({kb / capacity:.2f} KB/tenant)")
 
     engine = ServeEngine(cfg, params, registry, peft, slots=args.slots,
                          prompt_buckets=(bucket,),
-                         max_new_tokens=args.gen, faults=faults)
+                         max_new_tokens=args.gen, faults=faults,
+                         journal=journal)
+    report = None
+    if args.restore:
+        # warm restart BEFORE warmup: membership rebuilt from the
+        # journal, resume buckets registered for compilation
+        report = recover(journal, registry, engine)
+        print(f"warm restart: {len(report.resume)} in-flight resumed, "
+              f"{len(report.completed) + len(report.failed)} journaled "
+              f"terminals adopted, membership {report.membership}")
     snap = engine.warmup()
 
     # a malformed tenant id raises at the frontend instead of silently
@@ -124,10 +150,14 @@ def main():
                                   deadline_total_s=deadline_s)
     sched = Scheduler(engine, watchdog_s=10 * deadline_s
                       if deadline_s else None)
+    if report is not None:
+        journaled = report.journaled_rids()
+        workload = [r for r in workload if r.rid not in journaled]
     # deadlines are inert under the inf saturation clock, so a deadline
     # run replays on the real clock instead
     done = sched.run(copy.deepcopy(workload),
-                     clock=None if deadline_s else lambda: float("inf"))
+                     clock=None if deadline_s else lambda: float("inf"),
+                     resume=report.resume if report else ())
     engine.assert_no_retrace(snap)
     s = summarize(done, scheduler=sched)
     print(f"served {s['n_requests']} requests / "

@@ -1,7 +1,12 @@
 """Fault-tolerant checkpointing.
 
-* **Atomic**: writes go to ``step_<N>.tmp/`` and are renamed into place —
-  a crash mid-write never corrupts the latest checkpoint.
+* **Atomic AND durable**: writes go to ``step_<N>.tmp/`` — contents
+  fsynced, tmp dir fsynced — then renamed into place with a parent-dir
+  fsync: a crash (or power loss) at any point leaves either the previous
+  complete checkpoint or the new complete one.  Auto-restore
+  (``latest_step``) additionally skips partial/corrupt checkpoint dirs
+  with a warning instead of crashing on them; restoring an *explicit*
+  step stays strict.
 * **Async**: device→host transfer + serialization run on a writer thread;
   the train loop blocks only if a previous save is still in flight
   (bounded queue of 1 — backpressure instead of unbounded memory).
@@ -54,9 +59,41 @@ def _ckpt_dirs(root: str) -> list[tuple[int, str]]:
     return sorted(out)
 
 
+def _is_complete(path: str) -> bool:
+    """A published checkpoint dir is restorable: the manifest parses and
+    names a step, and the array archive is a readable zip.  A dir that
+    fails this is a crash artifact (e.g. the process died after
+    ``os.rename`` but before the data hit disk on a non-journaling
+    filesystem) — auto-restore must skip it, not crash on it."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        if "step" not in manifest:
+            return False
+        import zipfile
+        return zipfile.is_zipfile(os.path.join(path, "arrays.npz"))
+    except (OSError, ValueError):
+        return False
+
+
 def latest_step(root: str) -> Optional[int]:
-    dirs = _ckpt_dirs(root)
-    return dirs[-1][0] if dirs else None
+    """Newest *complete* checkpoint step (partial/corrupt dirs are
+    skipped with a warning), or None."""
+    for step, path in reversed(_ckpt_dirs(root)):
+        if _is_complete(path):
+            return step
+        import warnings
+        warnings.warn(f"skipping incomplete/corrupt checkpoint {path} "
+                      f"(crash artifact?)", stacklevel=2)
+    return None
+
+
+def _fsync_path(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 class CheckpointManager:
@@ -91,6 +128,12 @@ class CheckpointManager:
         if self.async_write and not block:
             self._q.put(job)          # blocks only if a save is in flight
         else:
+            if self.async_write:
+                # a queued async save may target the SAME step (e.g. the
+                # final blocking save landing on a ckpt_every boundary);
+                # two writers on one step_<N>.tmp tear each other down —
+                # drain the worker before writing inline
+                self._q.join()
             self._write(*job)
 
     def _worker(self):
@@ -121,16 +164,27 @@ class CheckpointManager:
                 dtypes[k] = str(v.dtype)
                 v = np.ascontiguousarray(v).view(np.uint8)
             packed[k.replace("/", "\x1f")] = v
-        np.savez(os.path.join(tmp, "arrays.npz"), **packed)
+        # full crash-safe sequence: fsync both files, fsync the tmp dir
+        # (so the entries are durable before the publish), rename, fsync
+        # the parent — a crash at ANY point leaves either the previous
+        # complete checkpoint or this complete one, never a torn mix
+        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+            np.savez(f, **packed)
+            f.flush()
+            os.fsync(f.fileno())
         manifest = {"step": step, "time": time.time(),
                     "process_index": jax.process_index(),
                     "n_arrays": len(flat), "dtypes": dtypes,
                     "extra": extra}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_path(tmp)
         if os.path.isdir(final):
             shutil.rmtree(final)
         os.rename(tmp, final)         # atomic publish
+        _fsync_path(self.root)
         self._gc()
 
     def _gc(self):

@@ -47,6 +47,17 @@ storms (DESIGN.md §12) — and the report adds the split failure
 accounting plus typed outcome counts.  Degradation is bookkeeping:
 zero recompiles is asserted in both modes.
 
+``--journal-dir`` makes the replay crash-safe (DESIGN.md §13): adapter
+puts spill through a durable atomic-rename store and every admission /
+token / outcome is written ahead to an append-only journal
+(``--fsync-every`` batches the fsyncs).  ``--kill-at-step N`` SIGKILLs
+the process at the Nth engine step (exit 137); rerunning the same
+command with ``--restore`` instead warm-restarts it: registry
+membership is rebuilt from the journal, in-flight requests resume as
+extended prefills, the not-yet-journaled remainder replays, and the
+report asserts every rid landed in exactly one accounting bucket and
+prints the measured restart RTO.
+
 All four decoder families serve through the engine: attention models
 via causal pad masking, Mamba-2 (``--arch mamba2-1.3b``) and
 RecurrentGemma (``--arch recurrentgemma-9b``) via pad-invariant
@@ -130,10 +141,14 @@ def _timed_generation(pf, st, params, adapters, batch, gen,
 
 def run_trace(args, cfg, peft, params, rng):
     """Continuous-batching replay over the serve engine."""
+    import dataclasses
+    import os
+
     import jax
     from repro.core.peft import validate_tenant_ids
-    from repro.serving import (AdapterRegistry, FaultPlan, Scheduler,
-                               ServeEngine, summarize, synthetic_workload)
+    from repro.serving import (AdapterRegistry, AdapterStore, FaultPlan,
+                               Journal, Scheduler, ServeEngine, recover,
+                               summarize, synthetic_workload)
 
     capacity = args.tenants if args.tenants > 0 else 8
     distinct = args.distinct_tenants or 4 * capacity
@@ -148,13 +163,44 @@ def run_trace(args, cfg, peft, params, rng):
                                   n_steps=max(16, n_req * args.gen
                                               // max(args.slots, 1)),
                                   tenants=distinct)
+    if args.kill_at_step is not None:
+        # scheduled process death for the kill-and-restore drill: a REAL
+        # SIGKILL at the Nth engine step (exit 137) — the restarted
+        # process recovers with --restore over the same --journal-dir
+        crash = {"step": int(args.kill_at_step)}
+        faults = (FaultPlan(crash_at=crash, crash_kill=True)
+                  if faults is None else
+                  dataclasses.replace(faults, crash_at=crash,
+                                      crash_kill=True))
+    store = journal = None
+    if args.journal_dir:
+        store = AdapterStore(os.path.join(args.journal_dir, "adapters"),
+                             faults=faults)
+        journal = Journal(os.path.join(args.journal_dir, "journal.jsonl"),
+                          fsync_every=args.fsync_every, faults=faults)
+    elif args.restore:
+        raise SystemExit("--restore requires --journal-dir (the journal "
+                         "and durable store of the dead process)")
     registry = AdapterRegistry(params, peft, capacity, n_tenants=distinct,
                                rng=jax.random.fold_in(rng, 1),
                                merged_capacity=args.merged_capacity,
-                               faults=faults)
+                               faults=faults, store=store, journal=journal)
     engine = ServeEngine(cfg, params, registry, peft, slots=args.slots,
                          prompt_buckets=buckets,
-                         max_new_tokens=args.gen, faults=faults)
+                         max_new_tokens=args.gen, faults=faults,
+                         journal=journal)
+    report = None
+    if args.restore:
+        # warm restart (DESIGN.md §13): rebuild membership + re-admit
+        # in-flight requests BEFORE warmup so resume buckets compile there
+        report = recover(journal, registry, engine)
+        print(f"recovery: {len(report.resume)} in-flight to resume, "
+              f"{len(report.completed)} completed / "
+              f"{len(report.failed)} failed pre-crash (journaled), "
+              f"membership {report.membership}, "
+              f"torn_tail={report.torn_tail}, "
+              f"orphans_gc={report.orphans_gc}, "
+              f"{report.n_records} journal records")
     kb = registry.bank.size_bytes() / 1e3
     tier = (f", merged tier {args.merged_capacity} tenants"
             if args.merged_capacity else "")
@@ -192,11 +238,42 @@ def run_trace(args, cfg, peft, params, rng):
     # cancelled even when its request carries no deadline at all
     sched = Scheduler(engine, watchdog_s=10 * deadline_s
                       if deadline_s else None)
-    done = sched.run(workload)
+    if report is not None:
+        # the dead process journaled these rids: terminals are already
+        # accounted, in-flight continue via resume= — neither re-runs
+        # from the workload (the workload build is seed-deterministic,
+        # so the rids line up across the two processes)
+        journaled = report.journaled_rids()
+        to_run = [r for r in workload if r.rid not in journaled]
+        print(f"restore: {len(to_run)} workload requests not yet "
+              f"journaled, {len(report.resume)} resuming")
+        done = sched.run(to_run, resume=report.resume)
+    else:
+        done = sched.run(workload)
     engine.assert_no_retrace(snap)       # degradation never recompiles
-    if n_distinct > capacity and not registry.stats["evictions"]:
+    if report is None and n_distinct > capacity \
+            and not registry.stats["evictions"]:
         raise AssertionError("distinct tenants exceeded bank capacity "
                              "but nothing was evicted")
+    if report is not None:
+        # kill-anywhere accounting: every workload rid lands in exactly
+        # one bucket across the two process lives
+        pools = dict(
+            pre_completed=report.completed, pre_failed=report.failed,
+            completed=[r for r in done if not r.recovered],
+            recovered=[r for r in done if r.recovered],
+            failed=sched.failed, shed=sched.dropped)
+        seen: dict[int, str] = {}
+        for name, pool in pools.items():
+            for req in pool:
+                if req.rid in seen:
+                    raise AssertionError(
+                        f"rid {req.rid} accounted twice: "
+                        f"{seen[req.rid]} and {name}")
+                seen[req.rid] = name
+        missing = sorted({r.rid for r in workload} - set(seen))
+        if missing:
+            raise AssertionError(f"rids in no bucket: {missing}")
 
     s = summarize(done, scheduler=sched)
     r = registry.stats
@@ -243,8 +320,14 @@ def run_trace(args, cfg, peft, params, rng):
               f"{r['merge_s'] * 1e3:.2f} ms merging, "
               f"{sched.stats['affinity_admissions']} affinity admissions, "
               f"{registry.merged_size_bytes() / 1e3:.1f} KB merged HBM")
+    if report is not None:
+        print(f"warm restart: {s.get('recovered', 0)} recovered streams, "
+              f"restart RTO {s.get('restart_rto_s', 0.0) * 1e3:.1f} ms, "
+              f"exactly-one-bucket accounting over {len(seen)} rids OK")
     print(f"jit cache misses after warmup: 0 "
           f"(counters: {engine.jit_cache_misses()})")
+    if journal is not None:
+        journal.close()
 
 
 def main():
@@ -292,6 +375,21 @@ def main():
                          "budget is the TTFT deadline; blown-TTFT "
                          "requests are shed before prefill, blown-total "
                          "cancelled in flight; 0 = no deadlines)")
+    ap.add_argument("--journal-dir", default="",
+                    help="enable crash-safe serving: durable per-tenant "
+                         "adapter store + write-ahead request journal "
+                         "rooted here (DESIGN.md §13)")
+    ap.add_argument("--restore", action="store_true",
+                    help="warm restart: recover membership and resume "
+                         "in-flight requests from --journal-dir before "
+                         "replaying the not-yet-journaled remainder")
+    ap.add_argument("--kill-at-step", type=int, default=None,
+                    help="kill-and-restore drill: SIGKILL the process at "
+                         "the Nth engine step (exit 137); restart with "
+                         "--restore to recover")
+    ap.add_argument("--fsync-every", type=int, default=32,
+                    help="journal batched-fsync granularity (records per "
+                         "fsync; 1 = every record durable)")
     ap.add_argument("--chaos-seed", type=int, default=None,
                     help="seed a FaultPlan over every fault class "
                          "(corrupt/kernel/merge/straggler/evict_storm) "

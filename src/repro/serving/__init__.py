@@ -1,22 +1,38 @@
 """Continuous-batching multi-tenant serving subsystem (DESIGN.md §9).
 
-``registry``  — host tenant store + fixed-capacity device AdapterBank +
-                the merged-weight hot tier (merge-on-promotion, §11) +
-                quarantine/merge-fencing degradation state (§12)
-``engine``    — jit-stable slotted decode engine (prefill-into-slot,
-                fused batched decode step + merged-tier step variant,
-                in-jit non-finite guard, retrace counters)
-``scheduler`` — FCFS admission with tier-affinity lookahead, slot
-                allocation, Poisson/Zipf workloads, per-request SLO
-                deadlines + watchdog, split failure accounting
-``faults``    — seeded deterministic fault injection (FaultPlan) for
-                the degradation property tests (§12)
-``oracle``    — tier-faithful one-shot engine-vs-oracle equivalence
+``registry``    — host tenant store + fixed-capacity device AdapterBank
+                  + the merged-weight hot tier (merge-on-promotion,
+                  §11) + quarantine/merge-fencing degradation state
+                  (§12) + durable-store spill-through (§13)
+``engine``      — jit-stable slotted decode engine (prefill-into-slot,
+                  fused batched decode step + merged-tier step variant,
+                  in-jit non-finite guard, retrace counters, journal
+                  hooks + crash-recovery resume)
+``scheduler``   — FCFS admission with tier-affinity lookahead, slot
+                  allocation, Poisson/Zipf workloads, per-request SLO
+                  deadlines + watchdog, split failure accounting incl.
+                  the ``recovered`` bucket
+``faults``      — seeded deterministic fault injection (FaultPlan) for
+                  the degradation property tests (§12) and scheduled
+                  crashes (§13)
+``oracle``      — tier- and recovery-schedule-faithful one-shot
+                  engine-vs-oracle equivalence
+``persistence`` — durable per-tenant adapter store: atomic
+                  write-then-rename files, checksums, versions (§13)
+``journal``     — append-only write-ahead request journal with batched
+                  fsync (§13)
+``recovery``    — warm restart: rebuild registry membership + re-admit
+                  in-flight requests from journal + store (§13)
 """
 
 from repro.serving.engine import ServeEngine
-from repro.serving.faults import FAULT_CLASSES, FaultPlan, InjectedFault
+from repro.serving.faults import (CRASH_BOUNDARIES, DEGRADATION_CLASSES,
+                                  FAULT_CLASSES, FaultPlan, InjectedFault,
+                                  SimulatedCrash)
+from repro.serving.journal import Journal, JournalError, read_journal
 from repro.serving.oracle import oracle_tokens
+from repro.serving.persistence import AdapterStore, StoreCorruptionError
+from repro.serving.recovery import RecoveryReport, recover
 from repro.serving.registry import AdapterRegistry, AdapterValidationError
 from repro.serving.scheduler import (AdmissionError, ERROR_KINDS, FCFSQueue,
                                      QuarantineError, Request, RequestError,
@@ -24,7 +40,10 @@ from repro.serving.scheduler import (AdmissionError, ERROR_KINDS, FCFSQueue,
                                      synthetic_workload)
 
 __all__ = ["ServeEngine", "AdapterRegistry", "AdapterValidationError",
-           "AdmissionError", "ERROR_KINDS", "FAULT_CLASSES", "FCFSQueue",
-           "FaultPlan", "InjectedFault", "QuarantineError", "Request",
-           "RequestError", "Scheduler", "SlotAllocator", "summarize",
-           "synthetic_workload", "oracle_tokens"]
+           "AdapterStore", "AdmissionError", "CRASH_BOUNDARIES",
+           "DEGRADATION_CLASSES", "ERROR_KINDS", "FAULT_CLASSES",
+           "FCFSQueue", "FaultPlan", "InjectedFault", "Journal",
+           "JournalError", "QuarantineError", "RecoveryReport", "Request",
+           "RequestError", "Scheduler", "SimulatedCrash", "SlotAllocator",
+           "StoreCorruptionError", "oracle_tokens", "read_journal",
+           "recover", "summarize", "synthetic_workload"]

@@ -100,9 +100,16 @@ class ServeEngine:
                  registry: AdapterRegistry, peft, *, slots: int = 8,
                  prompt_buckets=DEFAULT_BUCKETS, max_new_tokens: int = 32,
                  max_len: Optional[int] = None, faults=None,
-                 step_retries: int = 1):
+                 step_retries: int = 1, journal=None):
         self.cfg, self.params, self.registry, self.peft = (cfg, params,
                                                            registry, peft)
+        # write-ahead journal (DESIGN.md §13): admissions are journaled
+        # BEFORE their prefill dispatches, every emitted token with its
+        # tier, and terminal outcomes — enough to rebuild in-flight
+        # requests as extended prefills after a process death.  None
+        # (production-unjournaled / bench baseline) short-circuits
+        # every hook.
+        self._journal = journal
         # degradation knobs (DESIGN.md §12): a step dispatch that raises
         # (XLA/Pallas runtime failure) is retried `step_retries` times
         # before the whole active batch is failed with typed outcomes;
@@ -166,6 +173,10 @@ class ServeEngine:
 
     def _now(self) -> float:
         return time.perf_counter() - self._origin
+
+    def _jrec(self, rec) -> None:
+        if self._journal is not None:
+            self._journal.append(rec)
 
     def start_clock(self, origin: float) -> None:
         """Align request timestamps with the scheduler's replay clock."""
@@ -316,6 +327,30 @@ class ServeEngine:
             f"prompt length {prompt_len} exceeds the largest pad "
             f"bucket {self.prompt_buckets[-1]}")
 
+    def ensure_bucket(self, prompt_len: int) -> int:
+        """Guarantee a prefill pad bucket covering ``prompt_len`` exists,
+        adding one if needed; returns the covering bucket.
+
+        Recovery needs this (DESIGN.md §13): a resumed request's
+        extended prefill runs over ``prompt + journaled tokens``, which
+        can exceed every configured bucket.  New buckets are rounded up
+        to a multiple of 8 (bounding the number of distinct compiles
+        across resume lengths) and capped at ``max_len`` — always
+        enough, because the original admission enforced
+        ``plen + max_new - 1 <= max_len``.  MUST be called before
+        :meth:`warmup` so the new bucket compiles there and post-warmup
+        traffic stays retrace-free."""
+        n = int(prompt_len)
+        if not 1 <= n <= self.max_len:
+            raise ValueError(f"prompt_len {n} outside [1, {self.max_len}]")
+        if n <= self.prompt_buckets[-1]:
+            return self.bucket_for(n)
+        b = min(self.max_len, ((n + 7) // 8) * 8)
+        self.prompt_buckets = tuple(sorted({*self.prompt_buckets, b}))
+        self._prefill_fns[b] = self._jit(f"prefill_p{b}",
+                                         self._make_prefill(b))
+        return b
+
     def admit(self, req: Request) -> list[Request]:
         """Prefill ``req`` into a free slot (acquiring its tenant's bank
         slot from the registry) and emit its first token.  Returns the
@@ -355,6 +390,16 @@ class ServeEngine:
         # frontend guard on the *slot* indirection as well — a registry
         # bug must raise here, not clamp inside the bank gather
         validate_tenant_ids([tslot], self.registry.capacity)
+        # write-ahead: the admission is journaled once it is certain to
+        # reach the prefill dispatch (all validations passed, slot and
+        # bank pin held) and BEFORE any device work — a crash anywhere
+        # past this line re-admits the request as a resume; a crash
+        # before it re-runs the request from the workload
+        self._jrec({"t": "admit", "rid": int(req.rid),
+                    "tid": int(req.tenant_id),
+                    "p": [int(t) for t in np.asarray(req.prompt)],
+                    "g": int(req.max_new_tokens),
+                    "a": float(req.arrival_s)})
         tokens = np.zeros((1, bucket), np.int32)
         tokens[0, :plen] = np.asarray(req.prompt, np.int32)
         t0 = self._now()
@@ -381,6 +426,8 @@ class ServeEngine:
         # tenants are bank-resident too, and per-bucket merged prefill
         # variants would multiply compiles for a non-steady-state cost
         req.tiers.append("bank")
+        self._jrec({"t": "tok", "rid": int(req.rid), "k": int(first),
+                    "x": "bank"})
         self._requests[slot] = req
         if req.done:
             return [self._retire(slot)]
@@ -410,6 +457,11 @@ class ServeEngine:
             return []
         ordinal = self._step_ordinal
         self._step_ordinal += 1
+        if self._faults is not None:
+            # engine-step crash boundary (DESIGN.md §13): outside the
+            # retry loop below and a BaseException — a process death is
+            # not a kernel failure and must not be retried away
+            self._faults.crash_now("step")
         if self._faults is not None and self._faults.storm_now(ordinal):
             # memory-pressure eviction storm: pins keep every in-flight
             # tenant resident, so the step below still serves correctly
@@ -446,6 +498,14 @@ class ServeEngine:
         self._state = state
         self.tier_stats[f"{tier}_steps"] += 1
         self.tier_stats[f"{tier}_tokens"] += len(self._requests)
+        if self._journal is not None:
+            # one batched record per step, BEFORE retirement bookkeeping
+            # so token records always precede their request's terminal
+            # record in the journal
+            emitted = [[int(r.rid), int(toks[s])]
+                       for s, r in self._requests.items() if not flags[s]]
+            if emitted:
+                self._jrec({"t": "step", "x": tier, "e": emitted})
         finished = []
         for slot, req in list(self._requests.items()):
             if flags[slot]:
@@ -525,7 +585,76 @@ class ServeEngine:
         self._alloc.free(slot)
         self.registry.release(req.tenant_id)
         req.finish_s = self._now()
+        end = {"t": "end", "rid": int(req.rid),
+               "ok": 1 if req.error is None else 0}
+        if req.error is not None:
+            end["err"] = req.error.kind
+        self._jrec(end)
         return req
+
+    def resume(self, req: Request) -> list[Request]:
+        """Re-admit a crash-recovered in-flight request (DESIGN.md §13)
+        as an **extended prefill** over ``prompt + journaled tokens``:
+        the journal proves the pre-crash tokens, greedy decode makes
+        the continuation deterministic, and the resume point is
+        recorded (``req.resume_points``) so the recovery-schedule-
+        faithful oracle can replay the exact prefill/decode boundary.
+        Returns the request in a list iff it finished immediately —
+        including the done-but-unrecorded case (every token journaled,
+        the terminal record lost in the un-fsynced tail), which is
+        retired on the spot without consuming a slot."""
+        req.recovered = True
+        k = len(req.tokens)
+        if req.done:
+            req.admit_s = req.admit_s if req.admit_s is not None else 0.0
+            req.first_token_s = req.first_token_s or req.admit_s
+            req.finish_s = self._now()
+            self._jrec({"t": "end", "rid": int(req.rid), "ok": 1})
+            return [req]
+        eff = np.concatenate([np.asarray(req.prompt, np.int32),
+                              np.asarray(req.tokens, np.int32)])
+        plen = int(len(eff))
+        remaining = int(req.max_new_tokens) - k
+        bucket = self.bucket_for(plen)    # ensure_bucket ran pre-warmup
+        api.validate_true_lens(plen, bucket)
+        slot = self._alloc.alloc()
+        if slot is None:
+            raise RuntimeError("no free decode slot for resume (at most "
+                               "`slots` requests were in flight at the "
+                               "crash, so this is a recovery bug)")
+        try:
+            tslot = self.registry.acquire(req.tenant_id)
+        except Exception:
+            self._alloc.free(slot)
+            raise
+        validate_tenant_ids([tslot], self.registry.capacity)
+        self._jrec({"t": "resume", "rid": int(req.rid), "n": k})
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :plen] = eff
+        t0 = self._now()
+        state, tok, bad = self._prefill_fns[bucket](
+            self.params, self.registry.bank, self._state, tokens,
+            plen, int(slot), int(tslot), remaining)
+        first, poisoned = jax.device_get((tok, bad))   # device sync
+        self._state = state
+        req.slot = slot
+        req.admit_s = t0
+        req.resume_points.append(k)
+        self._requests[slot] = req
+        if bool(poisoned):
+            return [self._fail_slot(slot, RequestError(
+                "nonfinite", f"tenant {req.tenant_id} produced "
+                f"non-finite logits on resume"))]
+        req.resumed_s = self._now()
+        if req.first_token_s is None:
+            req.first_token_s = req.resumed_s
+        req.tokens.append(int(first))
+        req.tiers.append("bank")          # extended prefill = bank tier
+        self._jrec({"t": "tok", "rid": int(req.rid), "k": int(first),
+                    "x": "bank"})
+        if req.done:
+            return [self._retire(slot)]
+        return []
 
     def warmup(self) -> dict[str, int]:
         """Compile every jitted entry point (all pad buckets, the decode
@@ -544,7 +673,8 @@ class ServeEngine:
         # hot tenant — promotions/demotions mid-trace never retrace
         state2, _, _ = self._merged_step_fn(self.params, state)
         jax.block_until_ready(state2["tok"])
-        tree = self.registry.adapters_for(0)           # warms init_fn
+        self.registry.warm_init()                      # warms init_fn
+        tree = self.registry.adapters_for(0)
         discarded = self.registry._swap(self.registry.bank, tree,
                                         jnp.int32(0))
         jax.block_until_ready(jax.tree_util.tree_leaves(discarded.tree)[0])

@@ -8,7 +8,7 @@ injected failures; the serving layers consult it at their natural
 failure boundaries and otherwise pay nothing (``faults=None`` is the
 production configuration and short-circuits every hook).
 
-Five fault classes, one per operational failure mode the tiered
+Six fault classes, one per operational failure mode the tiered
 multi-tenant engine has to survive:
 
 ``corrupt``
@@ -36,6 +36,15 @@ multi-tenant engine has to survive:
     registry tiers (modeling memory-pressure mass eviction).  Action:
     nothing to detect — serving must simply survive the re-onboarding
     churn with pins respected and zero retraces.
+``crash``
+    The whole process dies at a scheduled durability boundary
+    (:data:`CRASH_BOUNDARIES`: engine step, mid-merge, mid-put — before
+    or after the atomic rename — or mid-journal-flush).  Unlike the
+    other five classes this is NOT a degradation to handle in-process:
+    :class:`SimulatedCrash` derives from ``BaseException`` precisely so
+    no retry/fence handler (they catch ``RuntimeError``) can absorb it.
+    Recovery is a *restart* property — the journal + durable store must
+    rebuild serving state in a fresh process (DESIGN.md §13).
 
 Injection sites raise :class:`InjectedFault` (and only the layers'
 documented degradation paths may catch it), so a fault escaping its
@@ -53,13 +62,40 @@ import numpy as np
 
 Params = dict[str, Any]
 
-FAULT_CLASSES = ("corrupt", "kernel", "merge", "straggler", "evict_storm")
+FAULT_CLASSES = ("corrupt", "kernel", "merge", "straggler", "evict_storm",
+                 "crash")
+# the five in-process degradation classes: everything except ``crash``
+# (a sampled crash kills the replay instead of degrading it, so chaos
+# replays that expect to FINISH — the CLI --chaos-seed path, the
+# degraded-mode bench grid — draw from these by default)
+DEGRADATION_CLASSES = FAULT_CLASSES[:-1]
+
+# durability boundaries a scheduled crash can fire at (DESIGN.md §13):
+# ``step``           the engine's fused-step dispatch boundary
+# ``merge``          inside the registry's async merge dispatch
+# ``put``            in AdapterStore.put AFTER the tmp file is written
+#                    but BEFORE the atomic rename (orphan-GC case)
+# ``put-commit``     in AdapterStore.put AFTER the rename but before
+#                    the caller's host-side insert (adoption case)
+# ``journal-flush``  inside Journal.flush — a torn half-record reaches
+#                    disk, the buffered tail is lost
+CRASH_BOUNDARIES = ("step", "merge", "put", "put-commit", "journal-flush")
 
 
 class InjectedFault(RuntimeError):
     """An injected failure.  Raised at the exact boundary the modeled
     real failure would surface at; only the documented degradation
     handler for that boundary may catch it."""
+
+
+class SimulatedCrash(BaseException):
+    """A simulated whole-process death (SIGKILL / power loss) at a
+    durability boundary.  Derives from ``BaseException`` — NOT
+    ``RuntimeError`` — so the engine's step retry and the registry's
+    merge retry cannot catch it: a crash is not a degradation, and any
+    in-process handler swallowing it would fake durability the real
+    failure does not have.  Only test/bench harnesses (standing in for
+    the process supervisor) may catch it."""
 
 
 def corrupt_tree(tree: Params, kind: str = "nan") -> Params:
@@ -114,19 +150,43 @@ class FaultPlan:
     # decode-step ordinals at which all unpinned tenants are flushed
     # from both registry tiers
     evict_storm_at: frozenset = frozenset()
+    # boundary name (CRASH_BOUNDARIES) -> 0-based occurrence ordinal at
+    # which the process "dies" (SimulatedCrash, or a real SIGKILL with
+    # crash_kill).  Occurrences are counted per boundary by crash_now.
+    crash_at: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    # True: a scheduled crash sends SIGKILL to the process instead of
+    # raising — the CLI/CI kill-and-restore smoke, where the restart
+    # really is a fresh process
+    crash_kill: bool = False
     # runtime proof-of-firing counters (mutable on a frozen dataclass:
     # the dict identity is frozen, its contents are the log)
     fired: dict = dataclasses.field(default_factory=dict, compare=False)
+    # per-boundary occurrence counters for crash_now (mutable log,
+    # same discipline as ``fired``)
+    crash_seen: dict = dataclasses.field(default_factory=dict,
+                                         compare=False)
+
+    def __post_init__(self):
+        bad = sorted(set(self.crash_at) - set(CRASH_BOUNDARIES))
+        if bad:
+            raise ValueError(f"unknown crash boundaries {bad}; expected "
+                             f"a subset of {CRASH_BOUNDARIES}")
 
     @classmethod
-    def sample(cls, seed: int, *, classes=FAULT_CLASSES, n_steps: int = 64,
+    def sample(cls, seed: int, *, classes=DEGRADATION_CLASSES,
+               n_steps: int = 64,
                tenants: int = 8, n_events: int = 2,
                merge_failures: int = 1, slow_s: float = 0.02,
                persistent_merge_failure: bool = False) -> "FaultPlan":
         """Draw a deterministic plan from ``seed``: ``n_events`` firing
         points per requested class, spread over ``n_steps`` decode steps
         and ``tenants`` tenant ids.  The same (seed, kwargs) always
-        yields the same plan — chaos replays are reproducible."""
+        yields the same plan — chaos replays are reproducible.
+
+        Defaults to the five :data:`DEGRADATION_CLASSES`: a sampled
+        ``crash`` kills the replay (it is a restart property, not a
+        degradation), so it must be requested explicitly by callers
+        that drive a recovery afterwards."""
         bad = sorted(set(classes) - set(FAULT_CLASSES))
         if bad:
             raise ValueError(f"unknown fault classes {bad}; expected a "
@@ -160,6 +220,11 @@ class FaultPlan:
                                 for s in _steps(n_events)}
         if "evict_storm" in classes:
             kw["evict_storm_at"] = _steps(n_events)
+        if "crash" in classes:
+            b = CRASH_BOUNDARIES[int(rng.integers(len(CRASH_BOUNDARIES)))]
+            ordinal = (int(next(iter(_steps(1)))) if b == "step"
+                       else int(rng.integers(0, 3)))
+            kw["crash_at"] = {b: ordinal}
         return cls(seed=seed, **kw)
 
     def _fire(self, key: str) -> None:
@@ -209,6 +274,32 @@ class FaultPlan:
             raise InjectedFault(
                 f"injected pallas kernel failure at decode step "
                 f"{ordinal}")
+
+    # -- durability hook (DESIGN.md §13) -------------------------------
+
+    def crash_now(self, boundary: str) -> None:
+        """Called by the serving layers at each durability boundary
+        crossing.  Counts the occurrence; when it matches the scheduled
+        ``crash_at`` ordinal for that boundary, the process "dies":
+        :class:`SimulatedCrash` (a ``BaseException`` — no in-process
+        handler may absorb it), or a real SIGKILL under ``crash_kill``.
+        Fires at most once per boundary, like the death it models."""
+        if boundary not in CRASH_BOUNDARIES:
+            raise ValueError(f"unknown crash boundary {boundary!r}")
+        at = self.crash_at.get(boundary)
+        if at is None:
+            return
+        seen = self.crash_seen.get(boundary, 0)
+        self.crash_seen[boundary] = seen + 1
+        if seen == at and f"crash:{boundary}" not in self.fired:
+            self._fire(f"crash:{boundary}")
+            if self.crash_kill:
+                import os
+                import signal
+                os.kill(os.getpid(), signal.SIGKILL)
+            raise SimulatedCrash(
+                f"simulated process death at the {boundary!r} boundary "
+                f"(occurrence {at})")
 
     def storm_now(self, ordinal: int) -> bool:
         """True when an eviction storm is scheduled at this step."""

@@ -1,0 +1,145 @@
+"""Write-ahead request journal for crash-safe serving (DESIGN.md §13).
+
+An append-only JSONL log of everything needed to rebuild in-flight
+serving state after a process death: admissions (written BEFORE the
+prefill dispatches — write-ahead), every emitted token with the tier
+that produced it, terminal outcomes, registry membership events, and
+resume markers.  Greedy sampling makes the journaled token stream a
+*verifiable* prefix: recovery re-admits an in-flight request as an
+extended prefill over ``prompt + journaled tokens`` and the recovered
+stream is checked against the recovery-schedule-faithful oracle.
+
+Record types (compact keys — the journal is on the admission/step hot
+path):
+
+``{"t":"admit","rid":..,"tid":..,"p":[prompt ids],"g":max_new,"a":arrival_s}``
+``{"t":"tok","rid":..,"k":token,"x":tier}``        (prefill/resume token)
+``{"t":"step","x":tier,"e":[[rid,token],...]}``    (one fused decode step)
+``{"t":"end","rid":..,"ok":1}`` / ``{"t":"end","rid":..,"ok":0,"err":kind}``
+``{"t":"reg","ev":"onboard|evict|promote|demote|quarantine|rehab","tid":..}``
+``{"t":"resume","rid":..,"n":len(tokens at resume)}``
+
+Durability policy — **batched fsync**: records buffer on the host and
+one ``write + flush + fsync`` lands every ``fsync_every`` records (and
+on :meth:`close`).  A crash loses at most the un-fsynced tail, which is
+safe by construction: lost *admit* records mean the request is simply
+re-run from the workload; lost *token* records mean recovery resumes
+from an earlier prefix and greedy decode regenerates the identical
+tokens; lost *end* records mean an already-finished request is
+"resumed", immediately re-retired, and lands in the ``recovered``
+accounting bucket.  Nothing in the tail is load-bearing for
+correctness — only for how much work the restart repeats — which is
+exactly why the fsync can be batched and the overhead bench-gated
+(≤1.05x unjournaled, BENCH_serve ``serve_journal_overhead``).
+
+The reader tolerates a torn FINAL line (a crash mid-``write``): the
+fragment is dropped and reported.  A torn line anywhere else means the
+file was corrupted outside the crash model and raises."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+JREC = dict[str, Any]
+
+
+class JournalError(ValueError):
+    """The journal file is corrupt in a way a crash cannot produce
+    (unparseable NON-final line): refuse to recover from it rather than
+    rebuild wrong state."""
+
+
+class Journal:
+    """Append-only JSONL write-ahead log with batched fsync."""
+
+    def __init__(self, path: str, *, fsync_every: int = 32, faults=None):
+        self.path = str(path)
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        if fsync_every < 1:
+            raise ValueError("fsync_every must be >= 1")
+        self.fsync_every = int(fsync_every)
+        self._faults = faults
+        # append mode: a restarted process continues the SAME journal,
+        # so a second crash recovers over the full history
+        self._f = open(self.path, "a", encoding="utf-8")
+        self._pending: list[str] = []
+        self.stats = dict(records=0, flushes=0, flushed_records=0)
+
+    def append(self, rec: JREC) -> None:
+        """Buffer one record; flushes (write+fsync) every
+        ``fsync_every`` records."""
+        self._pending.append(json.dumps(rec, separators=(",", ":")) + "\n")
+        self.stats["records"] += 1
+        if len(self._pending) >= self.fsync_every:
+            self.flush()
+
+    def flush(self) -> None:
+        """Write + fsync the buffered tail.  Under an injected
+        ``journal-flush`` crash, a torn half-record reaches disk first —
+        the exact artifact a mid-write power loss leaves — so recovery's
+        torn-tail handling is tested against the real failure shape."""
+        if not self._pending:
+            return
+        if self._faults is not None:
+            try:
+                self._faults.crash_now("journal-flush")
+            except BaseException:
+                line = self._pending[-1]
+                torn = "".join(self._pending[:-1]) + \
+                    line[:max(1, len(line) // 2)]
+                self._f.write(torn)
+                self._f.flush()
+                os.fsync(self._f.fileno())
+                self._pending = []
+                raise
+        self._f.write("".join(self._pending))
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self.stats["flushes"] += 1
+        self.stats["flushed_records"] += len(self._pending)
+        self._pending = []
+
+    def close(self) -> None:
+        if self._f.closed:
+            return
+        self.flush()
+        self._f.close()
+
+    def __enter__(self) -> "Journal":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_journal(path: str) -> tuple[list[JREC], bool]:
+    """Parse a journal; returns ``(records, torn_tail)``.  A torn FINAL
+    line (crash mid-write) is dropped and flagged; a torn non-final
+    line raises :class:`JournalError` (that is corruption, not a
+    crash artifact)."""
+    records: list[JREC] = []
+    torn = False
+    if not os.path.exists(path):
+        return records, torn
+    with open(path, "r", encoding="utf-8") as f:
+        lines = f.read().split("\n")
+    # a well-formed journal ends with "\n", so the final split element
+    # is "" — anything else is a torn tail candidate
+    for i, line in enumerate(lines):
+        if not line:
+            continue
+        try:
+            records.append(json.loads(line))
+        except ValueError as e:
+            if i == len(lines) - 1:
+                torn = True
+                continue
+            raise JournalError(
+                f"{path}: unparseable record at line {i + 1} is not the "
+                f"final line — the file is corrupt beyond the crash "
+                f"model: {e}") from e
+    return records, torn

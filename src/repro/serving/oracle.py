@@ -1,4 +1,5 @@
-"""Tier-faithful one-shot oracle for engine-vs-oracle equivalence.
+"""Tier- and recovery-schedule-faithful one-shot oracle for
+engine-vs-oracle equivalence.
 
 The engine's bank tier (gather-and-reflect) and merged tier (reflection
 absorbed into the weights) are the same algebra but different float
@@ -10,6 +11,16 @@ against a single-tenant bank, merged steps against the registry's
 jitted kernel-backed merge of the same tenant (deterministic, so the
 oracle recomputes bitwise the tree the engine served even after the
 entry was demoted/evicted).
+
+Crash recovery adds a second schedule dimension (DESIGN.md §13): a
+recovered request's token at resume point ``k`` was produced by an
+**extended prefill** over ``prompt + tokens[:k]`` — a different float
+evaluation order than the decode step that would have produced it
+uncrashed, for the same reason the tiers differ.  So the oracle replays
+``Request.resume_points`` too: the token stream is verified in
+segments, each opened by a prefill over the prompt extended with the
+tokens journaled before that resume, then continued per the tier
+schedule.  An un-recovered request is the single-segment special case.
 """
 
 from __future__ import annotations
@@ -26,31 +37,53 @@ Params = dict[str, Any]
 
 def oracle_tokens(cfg, peft, params: Params, registry, req) -> list[int]:
     """Re-generate a completed request one-shot (batch 1), following its
-    recorded tier schedule; returns the token list the engine must have
-    produced."""
+    recorded tier schedule AND its recovery schedule (resume points);
+    returns the token list the engine must have produced."""
     from repro.launch.serve import make_serving_fns
 
     if not req.tiers or req.tiers[0] != "bank":
         raise ValueError(f"request {req.rid} has no recorded tier "
                          f"schedule (tiers={req.tiers!r}) — replay it "
                          f"through the engine first")
-    gen = len(req.tokens) - 1
+    n = len(req.tokens)
+    pts = sorted(set(getattr(req, "resume_points", ()) or ()))
+    if pts and not (0 <= pts[0] and pts[-1] < n):
+        raise ValueError(f"request {req.rid}: resume points {pts} "
+                         f"outside [0, {n})")
+    bounds = sorted({0, *pts}) + [n]
     bank1 = AdapterBank.stack([registry.adapters_for(req.tenant_id)],
                               params, peft)
     ids0 = jnp.zeros((1,), jnp.int32)
-    pf, st = make_serving_fns(cfg, peft, gen)
-    batch = {"tokens": jnp.asarray(np.asarray(req.prompt))[None]}
-    cache, tok = pf(params, bank1, batch, ids0)
-    toks = [int(tok[0, 0])]
+    prompt = np.asarray(req.prompt)
     merged = None
-    st_m = None
-    for tier in req.tiers[1:]:
-        if tier == "merged":
-            if merged is None:
-                merged = registry.merge_tree(req.tenant_id)
-                _, st_m = make_serving_fns(cfg, None, gen)
-            tok, cache = st_m(merged, None, cache, tok, None)
-        else:
-            tok, cache = st(params, bank1, cache, tok, ids0)
+    toks: list[int] = []
+    for start, end in zip(bounds[:-1], bounds[1:]):
+        if start >= end:
+            continue
+        if req.tiers[start] != "bank":
+            raise ValueError(
+                f"request {req.rid}: token {start} opens a segment "
+                f"(prefill — always bank tier) but records tier "
+                f"{req.tiers[start]!r}")
+        # each segment is its own one-shot generation: prefill over the
+        # prompt extended with everything generated before the resume,
+        # then (end - start - 1) decode steps per the tier schedule
+        gen = end - start - 1
+        pf, st = make_serving_fns(cfg, peft, gen)
+        st_m = None
+        seg_prompt = np.concatenate(
+            [prompt, np.asarray(req.tokens[:start], prompt.dtype)])
+        batch = {"tokens": jnp.asarray(seg_prompt)[None]}
+        cache, tok = pf(params, bank1, batch, ids0)
         toks.append(int(tok[0, 0]))
+        for tier in req.tiers[start + 1:end]:
+            if tier == "merged":
+                if merged is None:
+                    merged = registry.merge_tree(req.tenant_id)
+                if st_m is None:
+                    _, st_m = make_serving_fns(cfg, None, gen)
+                tok, cache = st_m(merged, None, cache, tok, None)
+            else:
+                tok, cache = st(params, bank1, cache, tok, ids0)
+            toks.append(int(tok[0, 0]))
     return toks

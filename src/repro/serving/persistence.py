@@ -1,0 +1,247 @@
+"""Durable per-tenant adapter store (DESIGN.md §13).
+
+ETHER adapters are O(d) per linear, so a tenant's whole tree is a few
+KB — small enough that the durable tier is one *atomic file per tenant*
+rather than a log-structured store.  Each ``put`` follows the same
+crash-safe pattern as :mod:`repro.checkpoint.manager`:
+
+1. serialize the tree to ``.tenant_<tid>.npz.tmp`` in the store dir;
+2. ``fsync`` the tmp file (its bytes are durable);
+3. ``os.replace`` onto ``tenant_<tid>.npz`` (atomic publish — readers
+   see the old version or the new one, never a torn file);
+4. ``fsync`` the directory (the rename itself is durable).
+
+The npz embeds a ``__manifest__`` record (uint8-packed JSON) carrying a
+monotonic per-tenant **version** and a per-leaf **crc32** so bit rot or
+a torn pre-atomic-rename write is *detected* at load time instead of
+silently poisoning decode: :meth:`get` raises
+:class:`StoreCorruptionError`, which the registry routes into the same
+typed-quarantine path as an in-memory poisoning (DESIGN.md §12).
+
+Crash windows and their recovery obligations (property-tested via
+``FaultPlan.crash_at``):
+
+* between tmp write and rename (``put`` boundary): the published file
+  is untouched; the orphaned tmp is garbage-collected by
+  :meth:`sweep_orphans` on restart;
+* between rename and the caller's host-side insert (``put-commit``
+  boundary): the file IS the newer version; a restart *adopts* it —
+  the registry's load-on-miss path reads the store first.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.common.pytree import flatten_with_paths
+
+Params = dict[str, Any]
+
+_MANIFEST_KEY = "__manifest__"
+
+# mirror of checkpoint/manager.py: npz cannot round-trip ml_dtypes
+# (bfloat16, fp8), so non-native leaves are stored as raw uint8 views
+# with the dtype name recorded in the manifest
+_NATIVE_DTYPES = {
+    "bool", "int8", "int16", "int32", "int64", "uint8", "uint16",
+    "uint32", "uint64", "float16", "float32", "float64", "complex64",
+    "complex128",
+}
+
+
+class StoreCorruptionError(RuntimeError):
+    """A tenant's durable adapter file failed its integrity check
+    (checksum mismatch, unreadable npz, missing manifest).  The caller
+    must treat the tenant's durable copy as poisoned — the registry
+    quarantines instead of serving it."""
+
+
+def _tenant_file(tid: int) -> str:
+    return f"tenant_{int(tid)}.npz"
+
+
+def _unflatten(flat: dict[str, np.ndarray]) -> Params:
+    out: Params = {}
+    for path, leaf in flat.items():
+        node = out
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return out
+
+
+class AdapterStore:
+    """One atomic, checksummed file per tenant under ``root``."""
+
+    def __init__(self, root: str, *, faults=None):
+        self.root = str(root)
+        os.makedirs(self.root, exist_ok=True)
+        self._faults = faults
+        self._versions: dict[int, int] = {}
+        self.stats = dict(puts=0, loads=0, deletes=0, orphans_gc=0,
+                          corrupt_loads=0, bytes_written=0)
+
+    # -- write path ---------------------------------------------------
+
+    def put(self, tenant_id: int, adapters: Params) -> int:
+        """Durably persist a tenant's adapter tree; returns the new
+        monotonic version.  Atomic: a crash at ANY point leaves either
+        the previous published version or the new one on disk, never a
+        torn file (see module docstring for the two crash windows)."""
+        tid = int(tenant_id)
+        version = self.version_of(tid) + 1
+        flat = {p: np.asarray(jax.device_get(v))
+                for p, v in flatten_with_paths(adapters)}
+        dtypes: dict[str, str] = {}
+        crcs: dict[str, int] = {}
+        packed: dict[str, np.ndarray] = {}
+        for path, arr in flat.items():
+            if arr.dtype.kind == "V" or str(arr.dtype) not in _NATIVE_DTYPES:
+                dtypes[path] = str(arr.dtype)
+                arr = np.ascontiguousarray(arr).view(np.uint8)
+            crcs[path] = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            packed[path.replace("/", "\x1f")] = arr
+        manifest = dict(tenant=tid, version=version, dtypes=dtypes,
+                        crc=crcs)
+        packed[_MANIFEST_KEY] = np.frombuffer(
+            json.dumps(manifest, sort_keys=True).encode(), np.uint8)
+        final = os.path.join(self.root, _tenant_file(tid))
+        tmp = os.path.join(self.root, f".{_tenant_file(tid)}.tmp")
+        with open(tmp, "wb") as f:
+            np.savez(f, **packed)
+            f.flush()
+            os.fsync(f.fileno())
+        if self._faults is not None:
+            # crash window 1: durable tmp bytes, publish not yet done —
+            # recovery must GC the orphan and keep the old version
+            self._faults.crash_now("put")
+        os.replace(tmp, final)                         # atomic publish
+        self._fsync_dir()
+        self.stats["puts"] += 1
+        self.stats["bytes_written"] += os.path.getsize(final)
+        self._versions[tid] = version
+        if self._faults is not None:
+            # crash window 2: published but the caller's host insert is
+            # lost — recovery must ADOPT the newer on-disk version
+            self._faults.crash_now("put-commit")
+        return version
+
+    def _fsync_dir(self) -> None:
+        fd = os.open(self.root, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    # -- read path ----------------------------------------------------
+
+    def get(self, tenant_id: int) -> Optional[Params]:
+        """Load + integrity-check a tenant's tree; None when the tenant
+        has no durable copy.  Raises :class:`StoreCorruptionError` on
+        any integrity failure — never returns a questionable tree."""
+        tid = int(tenant_id)
+        path = os.path.join(self.root, _tenant_file(tid))
+        if not os.path.exists(path):
+            return None
+        try:
+            with np.load(path) as data:
+                if _MANIFEST_KEY not in data.files:
+                    raise StoreCorruptionError(
+                        f"tenant {tid}: durable file has no manifest")
+                manifest = json.loads(bytes(data[_MANIFEST_KEY]).decode())
+                flat: dict[str, np.ndarray] = {}
+                for key in data.files:
+                    if key == _MANIFEST_KEY:
+                        continue
+                    flat[key.replace("\x1f", "/")] = data[key]
+        except StoreCorruptionError:
+            self.stats["corrupt_loads"] += 1
+            raise
+        except Exception as e:   # torn zip, bad JSON, truncated entry
+            self.stats["corrupt_loads"] += 1
+            raise StoreCorruptionError(
+                f"tenant {tid}: unreadable durable file: {e}") from e
+        crcs = manifest.get("crc", {})
+        if set(crcs) != set(flat):
+            self.stats["corrupt_loads"] += 1
+            raise StoreCorruptionError(
+                f"tenant {tid}: leaf set does not match manifest")
+        for p, arr in flat.items():
+            if zlib.crc32(np.ascontiguousarray(arr).tobytes()) != crcs[p]:
+                self.stats["corrupt_loads"] += 1
+                raise StoreCorruptionError(
+                    f"tenant {tid}: checksum mismatch at {p!r}")
+        for p, dt in manifest.get("dtypes", {}).items():
+            import ml_dtypes  # noqa: F401 — registers bf16 etc.
+            flat[p] = flat[p].view(np.dtype(dt))
+        self._versions[tid] = int(manifest.get("version", 1))
+        self.stats["loads"] += 1
+        return _unflatten(flat)
+
+    def version_of(self, tenant_id: int) -> int:
+        """Last known durable version (0 = never persisted).  Reads the
+        on-disk manifest when this process has not seen the tenant yet
+        (restart adoption)."""
+        tid = int(tenant_id)
+        if tid in self._versions:
+            return self._versions[tid]
+        path = os.path.join(self.root, _tenant_file(tid))
+        if not os.path.exists(path):
+            return 0
+        try:
+            with np.load(path) as data:
+                manifest = json.loads(bytes(data[_MANIFEST_KEY]).decode())
+            v = int(manifest.get("version", 1))
+        except Exception:
+            # corrupt file: version unknown; get() will raise the typed
+            # error — treat as "a version exists" so put() supersedes it
+            v = 1
+        self._versions[tid] = v
+        return v
+
+    def tenants(self) -> list[int]:
+        """Tenant ids with a published durable file, sorted."""
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("tenant_") and name.endswith(".npz"):
+                try:
+                    out.append(int(name[len("tenant_"):-len(".npz")]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    # -- lifecycle ----------------------------------------------------
+
+    def delete(self, tenant_id: int) -> bool:
+        """Drop a tenant's durable copy (quarantine eviction: the
+        poisoned host copy is dropped, so the poisoned durable copy
+        must go too or a restart would resurrect it)."""
+        path = os.path.join(self.root, _tenant_file(int(tenant_id)))
+        if not os.path.exists(path):
+            return False
+        os.unlink(path)
+        self._fsync_dir()
+        self._versions.pop(int(tenant_id), None)
+        self.stats["deletes"] += 1
+        return True
+
+    def sweep_orphans(self) -> int:
+        """Remove tmp files a crash left behind (crash window 1: the
+        rename never happened, so the published file is the truth and
+        the tmp is garbage).  Returns how many were collected."""
+        n = 0
+        for name in os.listdir(self.root):
+            if name.endswith(".tmp"):
+                os.unlink(os.path.join(self.root, name))
+                n += 1
+        if n:
+            self._fsync_dir()
+        self.stats["orphans_gc"] += n
+        return n

@@ -1,0 +1,172 @@
+"""Warm restart: rebuild serving state from journal + durable store
+(DESIGN.md §13).
+
+``recover`` is the single entry point a restarted serving process calls
+between constructing a fresh registry/engine and running warmup:
+
+1. **Read the journal** (torn final line tolerated — a crash mid-write
+   artifact, not corruption).
+2. **GC store orphans**: tmp files from a crash between an adapter
+   put's durable write and its atomic rename.
+3. **Replay request records** into per-rid token/tier prefixes and
+   classify every journaled rid: terminal (an ``end`` record survived —
+   completed or failed before the crash, nothing to re-run), or
+   in-flight (re-admitted as an extended prefill via
+   ``engine.resume``).  A request whose every token was journaled but
+   whose ``end`` record was lost resumes trivially: ``engine.resume``
+   retires it on the spot into the ``recovered`` bucket.
+4. **Replay registry events** (onboard/evict/promote/demote/
+   quarantine/rehab) to the crash-time membership and rebuild it:
+   quarantine flags first, bank rows re-onboarded in LRU order
+   (durable copies adopted, corrupt ones quarantined — restore never
+   crashes on bad bytes), hot tenants re-merged through the ordinary
+   promotion path.
+5. **Pre-compile resume buckets**: extended prefills run over
+   ``prompt + tokens`` which can exceed every configured bucket —
+   ``engine.ensure_bucket`` registers the needed sizes so the
+   *caller's* subsequent ``engine.warmup()`` compiles them and
+   post-restart traffic stays retrace-free.
+
+The caller then runs ``warmup()`` and hands ``report.resume`` to
+``Scheduler.run(..., resume=...)``.  The restarted process appends to
+the SAME journal, so a second crash — including one during recovery
+itself — recovers over the full history (``Request.resume_points``
+accumulates one entry per survived crash).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.serving.journal import Journal, read_journal
+from repro.serving.scheduler import Request, RequestError
+
+_REG_EVENTS = ("onboard", "evict", "promote", "demote", "quarantine",
+               "rehab")
+
+
+@dataclasses.dataclass
+class RecoveryReport:
+    """What a warm restart rebuilt, for accounting and reporting.
+    Every journaled rid appears in exactly ONE of ``completed`` /
+    ``failed`` / ``resume`` — together with the restarted replay's own
+    buckets this is the exactly-one-bucket accounting the kill-anywhere
+    property asserts."""
+    resume: list       # in-flight at crash — re-admit via run(resume=)
+    completed: list    # terminal ok before the crash (journaled `end`)
+    failed: list       # terminal failed before the crash
+    membership: dict   # restore_membership counters
+    torn_tail: bool    # journal ended mid-record (crash mid-write)
+    orphans_gc: int    # store tmp files collected
+    n_records: int
+
+    def journaled_rids(self) -> set:
+        """Every rid the journal knows — the restarted replay must NOT
+        re-run these from the workload (resumes continue them;
+        terminals are already accounted)."""
+        return {r.rid for pool in (self.resume, self.completed,
+                                   self.failed) for r in pool}
+
+
+def recover(journal, registry, engine) -> RecoveryReport:
+    """Rebuild serving state after a process death.  ``journal`` is a
+    path or a :class:`~repro.serving.journal.Journal`; ``registry`` and
+    ``engine`` are FRESH instances (same configuration/seed as the dead
+    process — deterministic synthetic adapters and the durable store
+    together reproduce the exact adapter values).  Call BEFORE
+    ``engine.warmup()``."""
+    path = journal.path if isinstance(journal, Journal) else str(journal)
+    records, torn = read_journal(path)
+    orphans = (registry.store.sweep_orphans()
+               if registry.store is not None else 0)
+
+    reqs: dict[int, Request] = {}
+    ended: dict[int, dict] = {}
+    resident: dict[int, None] = {}     # insertion order = LRU order
+    merged: dict[int, None] = {}
+    quarantined: set[int] = set()
+    for rec in records:
+        t = rec["t"]
+        if t == "admit":
+            reqs[rec["rid"]] = Request(
+                rid=int(rec["rid"]), tenant_id=int(rec["tid"]),
+                prompt=np.asarray(rec["p"], np.int32),
+                max_new_tokens=int(rec["g"]),
+                # original arrival is pre-crash wall time; post-restart
+                # the request is immediately ready
+                arrival_s=0.0)
+        elif t == "tok":
+            r = reqs[rec["rid"]]
+            r.tokens.append(int(rec["k"]))
+            r.tiers.append(rec["x"])
+        elif t == "step":
+            for rid, tok in rec["e"]:
+                r = reqs[rid]
+                r.tokens.append(int(tok))
+                r.tiers.append(rec["x"])
+        elif t == "resume":
+            r = reqs[rec["rid"]]
+            r.recovered = True
+            r.resume_points.append(int(rec["n"]))
+        elif t == "end":
+            ended[rec["rid"]] = rec
+        elif t == "reg":
+            ev, tid = rec["ev"], int(rec["tid"])
+            if ev == "onboard":
+                resident.pop(tid, None)             # re-insert at end:
+                resident[tid] = None                # dict order is LRU
+            elif ev == "evict":
+                resident.pop(tid, None)
+            elif ev == "promote":
+                merged.pop(tid, None)
+                merged[tid] = None
+            elif ev == "demote":
+                merged.pop(tid, None)
+            elif ev == "quarantine":
+                quarantined.add(tid)
+                resident.pop(tid, None)
+                merged.pop(tid, None)
+            elif ev == "rehab":
+                quarantined.discard(tid)
+            else:
+                raise ValueError(f"unknown registry event {ev!r} "
+                                 f"(expected one of {_REG_EVENTS})")
+        else:
+            raise ValueError(f"unknown journal record type {t!r}")
+
+    completed: list[Request] = []
+    failed: list[Request] = []
+    resume: list[Request] = []
+    for rid in sorted(reqs):
+        r = reqs[rid]
+        end = ended.get(rid)
+        if end is None:
+            r.recovered = True
+            resume.append(r)
+            continue
+        # terminal before the crash: nothing to re-run; stamp the
+        # journal-lost timestamps so summaries over these are harmless
+        r.admit_s = r.first_token_s = r.finish_s = 0.0
+        if end.get("ok"):
+            completed.append(r)
+        else:
+            r.error = RequestError(
+                end.get("err", "kernel"),
+                "journaled terminal outcome (pre-crash)")
+            failed.append(r)
+
+    membership = registry.restore_membership(
+        resident=list(resident), merged=list(merged),
+        quarantined=quarantined)
+
+    for r in resume:
+        if not r.done:
+            engine.ensure_bucket(len(r.prompt) + len(r.tokens))
+
+    return RecoveryReport(resume=resume, completed=completed,
+                          failed=failed, membership=membership,
+                          torn_tail=torn, orphans_gc=orphans,
+                          n_records=len(records))

@@ -48,6 +48,7 @@ from repro.core.peft import (AdapterBank, MergedCache,
                              init_adapters, merge_params,
                              validate_tenant_ids)
 from repro.core.transforms import PEFTConfig
+from repro.serving.persistence import StoreCorruptionError
 from repro.serving.scheduler import QuarantineError
 
 Params = dict[str, Any]
@@ -72,7 +73,8 @@ class AdapterRegistry:
                  merged_capacity: int = 0, promote_after: int = 3,
                  demote_below: int = 1, window: int = 32,
                  min_dwell: int = 16, merge_retries: int = 2,
-                 merge_backoff_s: float = 0.0, faults=None):
+                 merge_backoff_s: float = 0.0, faults=None,
+                 store=None, journal=None):
         if peft.method not in AdapterBank.BANK_METHODS:
             raise ValueError(f"registry serves {AdapterBank.BANK_METHODS} "
                              f"banks only (got {peft.method!r})")
@@ -123,6 +125,13 @@ class AdapterRegistry:
         self.merge_retries = merge_retries
         self.merge_backoff_s = merge_backoff_s
         self._faults = faults                  # FaultPlan | None
+        # -- durability (DESIGN.md §13) --------------------------------
+        # `store` is the durable per-tenant AdapterStore (None = the
+        # host dict `_store` is the only copy and a process death loses
+        # every put); `journal` receives registry membership events so
+        # a warm restart rebuilds bank residency + the hot set.
+        self.store = store
+        self._journal = journal
         self._faults_corrupted: set[int] = set()
         self._quarantined: set[int] = set()    # suspect tenants (fenced)
         self._merge_fenced: set[int] = set()   # permanent merge failures
@@ -165,6 +174,15 @@ class AdapterRegistry:
         fn = jax.jit(_init_impl)
         return lambda tid: fn(jnp.int32(tid))
 
+    def warm_init(self) -> None:
+        """Trace the synthetic-init jit without consulting the host
+        cache or the durable store.  Post-restart, warmup's
+        ``adapters_for(0)`` may be satisfied by an adopted durable copy,
+        leaving the init path untraced until the first store-miss tenant
+        arrives mid-flight — which would trip the no-retrace contract."""
+        jax.block_until_ready(
+            jax.tree_util.tree_leaves(self._init_fn(0))[0])
+
     # -- host-side tenant store --------------------------------------
 
     def put(self, tenant_id: int, adapters: Params) -> None:
@@ -177,16 +195,34 @@ class AdapterRegistry:
         :class:`AdapterValidationError` here instead of failing later
         inside jit (or poisoning decode).  A validated ``put`` is also
         the rehabilitation path: it clears the tenant's quarantine flag
-        and merge fence, since both mark the *old* adapters as bad."""
+        and merge fence, since both mark the *old* adapters as bad.
+
+        With a durable store attached, the put spills through it FIRST
+        (write-then-rename atomic file, DESIGN.md §13) — validation
+        precedes the spill, so a rejected put never leaves a file
+        behind, and a crash between the durable write and the host-side
+        insert below is recoverable: the restarted registry's
+        load-on-miss path adopts the newer on-disk version."""
         self.validate(tenant_id)
         self.validate_adapters(adapters)
         tid = int(tenant_id)
+        if self.store is not None:
+            self.store.put(tid, adapters)
         self._store[tid] = adapters
-        self._quarantined.discard(tid)
+        if tid in self._quarantined:
+            self._quarantined.discard(tid)
+            self._jlog("rehab", tid)
         self._merge_fenced.discard(tid)
         slot = self._slot_of.get(tid)
         if slot is not None:
             self._swap_in(slot, adapters)
+
+    def _jlog(self, ev: str, tid: int) -> None:
+        """Journal a registry membership event (no-op unjournaled) —
+        recovery replays these to rebuild bank residency, the hot set,
+        and quarantine flags in LRU order (DESIGN.md §13)."""
+        if self._journal is not None:
+            self._journal.append({"t": "reg", "ev": ev, "tid": int(tid)})
 
     def validate_adapters(self, adapters: Params) -> None:
         """Check an adapter tree against the bank layout: exactly the
@@ -234,7 +270,9 @@ class AdapterRegistry:
     def adapters_for(self, tenant_id: int) -> Params:
         tid = int(tenant_id)
         if tid not in self._store:
-            self._store[tid] = self._init_fn(tid)
+            durable = self._load_durable(tid)
+            self._store[tid] = (durable if durable is not None
+                                else self._init_fn(tid))
         if self._faults is not None and tid not in self._faults_corrupted:
             # injection site for the 'corrupt' fault class: poison the
             # stored tree BELOW the put-validation boundary (modeling
@@ -246,6 +284,38 @@ class AdapterRegistry:
                 from repro.serving.faults import corrupt_tree
                 self._store[tid] = corrupt_tree(self._store[tid], kind)
         return self._store[tid]
+
+    def _load_durable(self, tid: int) -> Optional[Params]:
+        """Load-on-miss from the durable store; None when the tenant
+        has no durable copy (synthetic init takes over).  The loaded
+        tree re-runs :meth:`validate_adapters` — on-disk corruption
+        (checksum failure OR a tree that validates structurally but
+        fails the bank layout) lands in the SAME typed-quarantine path
+        as live poisoning instead of crashing restore (DESIGN.md §13)."""
+        if self.store is None:
+            return None
+        try:
+            tree = self.store.get(tid)
+        except StoreCorruptionError as e:
+            self._quarantine_durable(tid, e)
+        if tree is None:
+            return None
+        try:
+            self.validate_adapters(tree)
+        except AdapterValidationError as e:
+            self._quarantine_durable(tid, e)
+        return tree
+
+    def _quarantine_durable(self, tid: int, err: Exception) -> None:
+        """A tenant's durable copy is poisoned: drop it (a restart must
+        not resurrect it), quarantine the tenant, and refuse the load
+        with the typed error the scheduler accounts as
+        ``failed_quarantine``."""
+        self.store.delete(tid)
+        self.mark_suspect(tid)
+        raise QuarantineError(
+            f"tenant {tid} durable adapters failed validation on "
+            f"restore: {err}") from err
 
     # -- slot lifecycle ----------------------------------------------
 
@@ -286,10 +356,14 @@ class AdapterRegistry:
             self.stats["hits"] += 1
         else:
             self.stats["misses"] += 1
+            # materialize BEFORE taking a slot: a durable-load failure
+            # (QuarantineError) must leave the slot maps untouched
+            tree = self.adapters_for(tid)
             slot = self._take_slot()
             self._slot_of[tid] = slot
             self._tenant_of[slot] = tid
-            self._swap_in(slot, self.adapters_for(tid))
+            self._swap_in(slot, tree)
+            self._jlog("onboard", tid)
         self._lru[tid] = None
         self._lru.move_to_end(tid)
         self._pins[tid] = self._pins.get(tid, 0) + 1
@@ -327,6 +401,7 @@ class AdapterRegistry:
             return
         self._quarantined.add(tid)
         self.stats["quarantines"] += 1
+        self._jlog("quarantine", tid)
         if self._pins.get(tid, 0) == 0:
             self._evict_quarantined(tid)
 
@@ -348,6 +423,10 @@ class AdapterRegistry:
             self._swap_in(slot, zero)
             self._free.append(slot)
         self._store.pop(tid, None)
+        if self.store is not None:
+            # the durable copy is the same poisoned tree — a restart
+            # must not resurrect it (rehabilitation is a fresh put)
+            self.store.delete(tid)
         self.stats["quarantine_evictions"] += 1
 
     def flush_unpinned(self) -> int:
@@ -370,6 +449,7 @@ class AdapterRegistry:
             self._pins.pop(tid, None)
             self._free.append(slot)
             self.stats["evictions"] += 1
+            self._jlog("evict", tid)
             n += 1
         self.stats["storm_flushes"] += 1
         return n
@@ -384,6 +464,7 @@ class AdapterRegistry:
                 del self._lru[tid]
                 self._pins.pop(tid, None)
                 self.stats["evictions"] += 1
+                self._jlog("evict", tid)
                 return slot
         raise RuntimeError(f"all {self.capacity} resident tenants are "
                            f"pinned by in-flight requests")
@@ -477,6 +558,7 @@ class AdapterRegistry:
         self._mlru.move_to_end(tid)
         self._promoted_at[tid] = self._requests_seen
         self._merge_t0[tid] = t0
+        self._jlog("promote", tid)
         return True
 
     def demote(self, tenant_id: int) -> None:
@@ -491,6 +573,7 @@ class AdapterRegistry:
         self._promoted_at.pop(tid, None)
         self._merge_t0.pop(tid, None)
         self.stats["demotions"] += 1
+        self._jlog("demote", tid)
 
     def _evict_merged(self) -> Optional[int]:
         """Free the least-recently-*served* unpinned merged entry; None
@@ -503,6 +586,7 @@ class AdapterRegistry:
                 self._promoted_at.pop(tid, None)
                 self._merge_t0.pop(tid, None)
                 self.stats["merged_evictions"] += 1
+                self._jlog("demote", tid)
                 return mslot
         return None
 
@@ -512,6 +596,11 @@ class AdapterRegistry:
         retried (XLA runtime failures and :class:`InjectedFault` both
         surface as RuntimeError) — anything else is a registry bug and
         propagates."""
+        if self._faults is not None:
+            # mid-merge crash boundary (DESIGN.md §13): SimulatedCrash
+            # is a BaseException, so the RuntimeError retry below can
+            # NOT absorb it — a process death is not a merge failure
+            self._faults.crash_now("merge")
         for attempt in range(1 + self.merge_retries):
             if attempt:
                 self.stats["merge_retries"] += 1
@@ -564,6 +653,67 @@ class AdapterRegistry:
             return
         discard = self.merge_tree(0)
         jax.block_until_ready(jax.tree_util.tree_leaves(discard)[0])
+
+    # -- warm restart (DESIGN.md §13) ---------------------------------
+
+    def restore_membership(self, resident=(), merged=(),
+                           quarantined=()) -> dict[str, int]:
+        """Rebuild cache membership after a process death, from the
+        journal's replayed registry events: ``resident`` / ``merged``
+        in LRU order (least recent first), ``quarantined`` as a set.
+
+        Quarantine flags are restored FIRST (a poisoned tenant must not
+        be re-onboarded), then bank rows are re-onboarded through the
+        ordinary load-or-init path — so durable copies are adopted and
+        a corrupt durable copy lands in the typed-quarantine path
+        (counted ``corrupt``, restore continues) — then hot tenants are
+        re-merged via the ordinary :meth:`promote`.  Call before the
+        engine's warmup: the swaps/merges here prime the same jitted
+        functions, and traffic after warmup stays retrace-free."""
+        out = dict(resident=0, merged=0, quarantined=0, corrupt=0,
+                   skipped=0)
+        for tid in quarantined:
+            tid = int(tid)
+            if tid not in self._quarantined:
+                self._quarantined.add(tid)
+                self.stats["quarantines"] += 1
+                self._jlog("quarantine", tid)
+            out["quarantined"] += 1
+        for tid in resident:
+            tid = int(tid)
+            if tid in self._quarantined or tid in self._slot_of:
+                out["skipped"] += 1
+                continue
+            if not self._free:
+                # capacity shrank across the restart: keep the most
+                # recent tenants (the list is LRU-ordered, so earlier
+                # entries are the right ones to lose)
+                out["skipped"] += 1
+                continue
+            try:
+                tree = self.adapters_for(tid)
+            except QuarantineError:
+                out["corrupt"] += 1
+                continue
+            slot = self._take_slot()
+            self._slot_of[tid] = slot
+            self._tenant_of[slot] = tid
+            self._swap_in(slot, tree)
+            self._lru[tid] = None
+            self._lru.move_to_end(tid)
+            self._jlog("onboard", tid)
+            out["resident"] += 1
+        if self.merged_capacity:
+            for tid in merged:
+                tid = int(tid)
+                if tid in self._quarantined or tid in self._merge_fenced:
+                    out["skipped"] += 1
+                    continue
+                try:
+                    out["merged"] += int(self.promote(tid))
+                except QuarantineError:
+                    out["corrupt"] += 1
+        return out
 
     # -- introspection ------------------------------------------------
 

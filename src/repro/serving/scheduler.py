@@ -94,6 +94,21 @@ class Request:
     tiers: list = dataclasses.field(default_factory=list)
     # typed terminal outcome; None = completed healthily
     error: Optional[RequestError] = None
+    # -- crash recovery (DESIGN.md §13) -------------------------------
+    # True once the request survived a process crash: its pre-crash
+    # tokens were rebuilt from the journal and decode continued in a
+    # restarted engine.  Completed-recovered requests land in the
+    # scheduler's `recovered` accounting bucket, disjoint from plain
+    # completions.
+    recovered: bool = False
+    # token indices at which an extended prefill (prompt + tokens[:k])
+    # restarted generation — one entry per survived crash.  The
+    # recovery-schedule-faithful oracle replays these exact prefill
+    # boundaries (prefill vs decode differ in float eval order).
+    resume_points: list = dataclasses.field(default_factory=list)
+    # when the restarted engine emitted this request's first
+    # post-restart token (restart RTO numerator), engine-clock seconds
+    resumed_s: Optional[float] = None
 
     @property
     def done(self) -> bool:
@@ -269,6 +284,7 @@ class Scheduler:
         self.shed_deadline: list[Request] = []
         self.failed_quarantine: list[Request] = []
         self.failed: list[Request] = []
+        self.recovered: list[Request] = []
         self.stats = dict(affinity_admissions=0,
                           backpressure_admissions=0, watchdog_cancels=0)
 
@@ -286,10 +302,11 @@ class Scheduler:
             shed_deadline=len(self.shed_deadline),
             failed_quarantine=len(self.failed_quarantine),
             failed_inflight=len(self.failed),
+            recovered=len(self.recovered),
             watchdog_cancels=self.stats["watchdog_cancels"])
 
-    def run(self, requests, *, clock: Optional[Callable[[], float]] = None
-            ) -> list[Request]:
+    def run(self, requests, *, clock: Optional[Callable[[], float]] = None,
+            resume=()) -> list[Request]:
         """Replay ``requests``; returns the healthily-completed ones in
         finish order (requests that terminated with a typed error are in
         ``self.failed``; admission-side sheds in ``self.dropped_*``).
@@ -300,6 +317,15 @@ class Scheduler:
         request immediately ready — the saturation/benchmark mode;
         deadlines and the watchdog are disabled under it).
 
+        ``resume`` (DESIGN.md §13): recovered in-flight requests from
+        :func:`repro.serving.recovery.recover`, re-admitted as extended
+        prefills BEFORE any fresh admission — they already held decode
+        slots when the process died, so they go back first (crash
+        recovery must not reorder them behind the queue).  At most
+        ``engine.slots`` were in flight, so they always fit.  Completed
+        recovered requests are returned with the rest and ALSO listed
+        in ``self.recovered`` — the disjoint accounting bucket.
+
         The accounting lists describe THIS replay: they are reset here,
         so read them after ``run`` returns and before the next call.
         """
@@ -307,6 +333,7 @@ class Scheduler:
         self.shed_deadline = []
         self.failed_quarantine = []
         self.failed = []
+        self.recovered = []
         self.stats = dict(affinity_admissions=0,
                           backpressure_admissions=0, watchdog_cancels=0)
         queue = FCFSQueue(requests)
@@ -332,6 +359,20 @@ class Scheduler:
         def collect(finished):
             for req in finished:
                 (done if req.ok else self.failed).append(req)
+                if req.ok and req.recovered:
+                    self.recovered.append(req)
+
+        for req in sorted(resume, key=lambda r: r.rid):
+            try:
+                collect(self.engine.resume(req))
+            except QuarantineError:
+                # the tenant's durable copy failed validation on restore
+                # (or was quarantined pre-crash): same typed outcome as
+                # a live quarantine refusal
+                req.error = RequestError(
+                    "quarantine",
+                    f"tenant {req.tenant_id} is quarantined")
+                self.failed_quarantine.append(req)
 
         while len(queue) or self.engine.n_active:
             admitted = 0
@@ -548,6 +589,15 @@ def summarize(completed: list[Request], *, dropped: int = 0,
         if dropped == 0:
             dropped = len(scheduler.dropped)
     extra.update(_slo_columns(completed, scheduler))
+    # restart RTO (DESIGN.md §13): replay-start → first token emitted
+    # for a crash-recovered request.  Measured over completed AND
+    # failed pools — a recovered request that later fails still proves
+    # when recovery first produced output.
+    pools = [completed] + ([scheduler.failed] if scheduler else [])
+    rto = min((r.resumed_s for pool in pools for r in pool
+               if r.resumed_s is not None), default=None)
+    if rto is not None:
+        extra["restart_rto_s"] = float(rto)
     if not completed:
         return dict(n_requests=0, n_dropped=int(dropped), **extra)
     toks = sum(len(r.tokens) for r in completed)

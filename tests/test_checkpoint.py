@@ -75,3 +75,67 @@ def test_dtype_preserved_via_template(tmp_path):
     mgr.save(1, tree)
     restored, _ = mgr.restore(template=tree)
     assert restored["w"].dtype == jnp.bfloat16
+
+
+def test_crash_during_save_restores_previous_complete(tmp_path,
+                                                      monkeypatch):
+    """A process death mid-_write (after the npz, before the rename)
+    leaves only a .tmp crash artifact; auto-restore finds the previous
+    complete checkpoint untouched."""
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(10, _tree(1.0))
+
+    real_rename = os.rename
+
+    def dying_rename(src, dst):
+        raise KeyboardInterrupt("simulated SIGKILL mid-publish")
+
+    monkeypatch.setattr(os, "rename", dying_rename)
+    with pytest.raises(KeyboardInterrupt):
+        mgr.save(20, _tree(2.0))
+    monkeypatch.setattr(os, "rename", real_rename)
+
+    # the torn save is invisible: tmp dir on disk, step 10 still latest
+    assert any(d.endswith(".tmp") for d in os.listdir(tmp_path))
+    assert latest_step(str(tmp_path)) == 10
+    mgr2 = CheckpointManager(str(tmp_path), async_write=False)
+    restored, _ = mgr2.restore(template=_tree())
+    np.testing.assert_allclose(restored["a"]["kernel"], 1.0)
+
+
+def test_latest_step_skips_partial_and_corrupt_dirs(tmp_path):
+    """A published-but-torn checkpoint dir (crash artifact) is skipped
+    with a warning; the newest COMPLETE checkpoint wins."""
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    mgr.save(1, _tree(1.0))
+    # partial: manifest only (no arrays) — e.g. data lost at power cut
+    os.makedirs(tmp_path / "step_2")
+    with open(tmp_path / "step_2" / "manifest.json", "w") as f:
+        json.dump({"step": 2, "extra": {}}, f)
+    # corrupt: arrays.npz present but not a zip
+    os.makedirs(tmp_path / "step_3")
+    with open(tmp_path / "step_3" / "manifest.json", "w") as f:
+        json.dump({"step": 3, "extra": {}}, f)
+    with open(tmp_path / "step_3" / "arrays.npz", "wb") as f:
+        f.write(b"\x00garbage")
+    # unparseable manifest
+    os.makedirs(tmp_path / "step_4")
+    with open(tmp_path / "step_4" / "manifest.json", "w") as f:
+        f.write("{not json")
+
+    with pytest.warns(UserWarning, match="incomplete/corrupt"):
+        assert latest_step(str(tmp_path)) == 1
+    with pytest.warns(UserWarning):
+        restored, _ = mgr.restore(template=_tree())
+    np.testing.assert_allclose(restored["a"]["kernel"], 1.0)
+
+
+def test_explicit_step_restore_stays_strict(tmp_path):
+    """Asking for a specific corrupt step is an error, not a silent
+    fallback — only AUTO-restore skips."""
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    os.makedirs(tmp_path / "step_5")
+    with open(tmp_path / "step_5" / "manifest.json", "w") as f:
+        f.write("{not json")
+    with pytest.raises((OSError, ValueError)):
+        mgr.restore(step=5, template=None)

@@ -1,0 +1,442 @@
+"""Crash-safe serving: kill-anywhere warm restart as properties
+(DESIGN.md §13).
+
+A scheduled :class:`SimulatedCrash` (a ``BaseException`` no in-process
+degradation handler can absorb) kills a journaled, durable-store-backed
+serving session at every durability boundary — engine step, mid-merge,
+mid-put (both sides of the atomic rename), mid-journal-flush — and a
+FRESH registry/engine (same seeds: deterministic synthetic adapters)
+recovers: membership restored, in-flight requests resumed as extended
+prefills, the trace completed.  Every test asserts the crash actually
+fired, every request lands in exactly one accounting bucket, recovered
+token streams match the recovery-schedule-faithful oracle, and nothing
+retraced after the restarted warmup.  Plus the durable-store unit
+properties: atomicity, checksums, versioning, orphan GC vs adoption
+around ``AdapterRegistry.put``.
+"""
+
+import copy
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.transforms import PEFTConfig
+from repro.models import init_model
+from repro.models.backbone import ModelConfig
+from repro.serving import (AdapterRegistry, AdapterStore,
+                           AdapterValidationError, FaultPlan, Journal,
+                           JournalError, QuarantineError, Scheduler,
+                           ServeEngine, SimulatedCrash,
+                           StoreCorruptionError, oracle_tokens,
+                           read_journal, recover, summarize,
+                           synthetic_workload)
+
+pytestmark = pytest.mark.chaos
+
+RNG = jax.random.PRNGKey(0)
+
+CFG = ModelConfig(name="crash-smoke", n_layers=1, d_model=32, n_heads=1,
+                  n_kv=1, d_ff=64, vocab=64, scan_layers=False)
+PEFT = PEFTConfig(method="ether", n_blocks=4, targets="q_proj",
+                  backend="jnp")
+PARAMS = init_model(RNG, CFG)
+
+INF = lambda: float("inf")                                     # noqa: E731
+
+TINY_W = jax.random.normal(jax.random.fold_in(RNG, 9), (16, 16))
+TINY_PARAMS = {"q_proj": {"kernel": TINY_W}}
+TINY_PEFT = PEFTConfig(method="ether", n_blocks=4, targets="q_proj")
+
+
+def build(tmp_path, plan=None, *, slots=2, capacity=3, gen=4,
+          fsync_every=4, **reg_kw):
+    """A journaled, durable-store-backed serving session rooted at
+    ``tmp_path`` — the same dirs across calls model process restarts
+    over the same disk."""
+    store = AdapterStore(str(tmp_path / "adapters"), faults=plan)
+    journal = Journal(str(tmp_path / "journal.jsonl"),
+                      fsync_every=fsync_every, faults=plan)
+    reg = AdapterRegistry(PARAMS, PEFT, capacity, n_tenants=8,
+                          rng=jax.random.fold_in(RNG, 1), faults=plan,
+                          store=store, journal=journal, **reg_kw)
+    eng = ServeEngine(CFG, PARAMS, reg, PEFT, slots=slots,
+                      prompt_buckets=(8,), max_new_tokens=gen,
+                      faults=plan, journal=journal)
+    return store, journal, reg, eng
+
+
+def workload(n=10, tenants=4, seed=0, **kw):
+    return synthetic_workload(n, tenants, vocab=CFG.vocab, rate_rps=None,
+                              prompt_lens=(3, 8), gen_lens=(2, 4),
+                              seed=seed, **kw)
+
+
+def scaled_tree(reg, tid, factor=1.5):
+    """A valid, visibly-distinct adapter tree for put tests."""
+    return jax.tree_util.tree_map(
+        lambda x: (np.asarray(x) * np.asarray(factor, np.asarray(x).dtype)
+                   ).astype(np.asarray(x).dtype), reg.adapters_for(tid))
+
+
+def assert_one_bucket(wl, report, done2, sched2):
+    """Kill-anywhere accounting: every workload rid in exactly one of
+    journal-completed / journal-failed / completed / recovered / failed
+    / shed."""
+    buckets = dict(
+        pre_completed=[r.rid for r in report.completed],
+        pre_failed=[r.rid for r in report.failed],
+        completed=[r.rid for r in done2 if not r.recovered],
+        recovered=[r.rid for r in done2 if r.recovered],
+        failed=[r.rid for r in sched2.failed],
+        shed=[r.rid for r in sched2.dropped],
+    )
+    seen = {}
+    for name, rids in buckets.items():
+        for rid in rids:
+            assert rid not in seen, \
+                f"rid {rid} in both {seen[rid]} and {name}"
+            seen[rid] = name
+    assert set(seen) == {r.rid for r in wl}, \
+        f"unaccounted rids: {sorted({r.rid for r in wl} - set(seen))}"
+    return buckets
+
+
+# ---------------------------------------------------------------------------
+# journal: WAL semantics, batched fsync, torn-tail tolerance
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrip_and_batched_fsync(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = Journal(path, fsync_every=3)
+    recs = [{"t": "admit", "rid": i, "tid": 0, "p": [1, 2], "g": 2,
+             "a": 0.0} for i in range(7)]
+    for r in recs:
+        j.append(r)
+    # 7 records, fsync_every=3: two flushes landed, one record buffered
+    assert j.stats["flushes"] == 2 and j.stats["flushed_records"] == 6
+    on_disk, torn = read_journal(path)
+    assert on_disk == recs[:6] and not torn
+    j.close()                              # close flushes the tail
+    on_disk, torn = read_journal(path)
+    assert on_disk == recs and not torn
+
+
+def test_journal_lost_unflushed_tail_models_process_death(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = Journal(path, fsync_every=100)
+    j.append({"t": "end", "rid": 0, "ok": 1})
+    del j                                  # process dies: buffer lost
+    assert read_journal(path) == ([], False)
+
+
+def test_journal_torn_final_line_tolerated_mid_corruption_raises(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    with open(path, "w") as f:
+        f.write('{"t":"end","rid":0,"ok":1}\n{"t":"end","rid":1,"o')
+    recs, torn = read_journal(path)
+    assert torn and recs == [{"t": "end", "rid": 0, "ok": 1}]
+    with open(path, "w") as f:
+        f.write('{"t":"end","rid":0,"o\n{"t":"end","rid":1,"ok":1}\n')
+    with pytest.raises(JournalError, match="not the final line"):
+        read_journal(path)
+
+
+def test_journal_flush_crash_leaves_torn_tail(tmp_path):
+    plan = FaultPlan(crash_at={"journal-flush": 0})
+    path = str(tmp_path / "j.jsonl")
+    j = Journal(path, fsync_every=2, faults=plan)
+    j.append({"t": "end", "rid": 0, "ok": 1})
+    with pytest.raises(SimulatedCrash):
+        j.append({"t": "end", "rid": 1, "ok": 1})   # triggers the flush
+    assert plan.fired.get("crash:journal-flush") == 1
+    recs, torn = read_journal(path)
+    # the first record's bytes landed; the second is the torn artifact
+    assert torn and recs == [{"t": "end", "rid": 0, "ok": 1}]
+
+
+# ---------------------------------------------------------------------------
+# durable store: atomicity, checksums, versioning
+# ---------------------------------------------------------------------------
+
+def test_store_roundtrip_bitwise_and_versioning(tmp_path):
+    reg = AdapterRegistry(TINY_PARAMS, TINY_PEFT, 2, n_tenants=4, rng=RNG)
+    store = AdapterStore(str(tmp_path))
+    tree = jax.tree_util.tree_map(np.asarray, reg.adapters_for(0))
+    assert store.put(0, tree) == 1
+    assert store.put(0, tree) == 2         # monotonic per-tenant version
+    assert store.tenants() == [0]
+    loaded = store.get(0)
+    for (pa, a), (pb, b) in zip(
+            sorted(jax.tree_util.tree_leaves_with_path(tree)),
+            sorted(jax.tree_util.tree_leaves_with_path(loaded))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a fresh store handle (restart) reads the persisted version
+    assert AdapterStore(str(tmp_path)).version_of(0) == 2
+    assert store.get(7) is None
+    assert store.delete(0) and store.tenants() == []
+
+
+def test_store_detects_corruption_with_checksums(tmp_path):
+    reg = AdapterRegistry(TINY_PARAMS, TINY_PEFT, 2, n_tenants=4, rng=RNG)
+    store = AdapterStore(str(tmp_path))
+    store.put(0, jax.tree_util.tree_map(np.asarray, reg.adapters_for(0)))
+    path = os.path.join(str(tmp_path), "tenant_0.npz")
+    blob = bytearray(open(path, "rb").read())
+    mid = len(blob) // 2
+    blob[mid] ^= 0xFF                      # flip bits mid-file
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+    with pytest.raises(StoreCorruptionError):
+        AdapterStore(str(tmp_path)).get(0)
+    # truncation (torn pre-rename write that somehow got published)
+    with open(path, "wb") as f:
+        f.write(bytes(blob[: len(blob) // 3]))
+    with pytest.raises(StoreCorruptionError):
+        AdapterStore(str(tmp_path)).get(0)
+
+
+# ---------------------------------------------------------------------------
+# AdapterRegistry.put × durable store error paths (satellite: ISSUE 8)
+# ---------------------------------------------------------------------------
+
+def test_rejected_put_leaves_no_partial_file(tmp_path):
+    store = AdapterStore(str(tmp_path / "adapters"))
+    reg = AdapterRegistry(TINY_PARAMS, TINY_PEFT, 2, n_tenants=4, rng=RNG,
+                          store=store)
+    bad = jax.tree_util.tree_map(np.asarray, reg.adapters_for(0))
+    bad = {"q_proj": {k: (np.full_like(v, np.nan)
+                          if np.issubdtype(v.dtype, np.floating) else v)
+                      for k, v in bad["q_proj"].items()}}
+    with pytest.raises(AdapterValidationError, match="non-finite"):
+        reg.put(0, bad)
+    # validation precedes the spill: nothing on disk, not even a tmp
+    assert store.tenants() == []
+    assert os.listdir(store.root) == []
+
+
+def test_put_crash_before_rename_orphan_gcd_old_version_kept(tmp_path):
+    plan = FaultPlan(crash_at={"put": 1})   # second put dies pre-rename
+    store = AdapterStore(str(tmp_path / "adapters"), faults=plan)
+    reg = AdapterRegistry(TINY_PARAMS, TINY_PEFT, 2, n_tenants=4, rng=RNG,
+                          store=store)
+    v1 = jax.tree_util.tree_map(np.asarray, reg.adapters_for(0))
+    reg.put(0, v1)
+    v2 = scaled_tree(reg, 0)
+    with pytest.raises(SimulatedCrash):
+        reg.put(0, v2)
+    assert plan.fired.get("crash:put") == 1
+    # "restart": fresh store over the same dir — the orphan tmp is
+    # GC'd and the published file is still v1, intact
+    store2 = AdapterStore(str(tmp_path / "adapters"))
+    assert any(n.endswith(".tmp") for n in os.listdir(store2.root))
+    assert store2.sweep_orphans() == 1
+    assert not any(n.endswith(".tmp") for n in os.listdir(store2.root))
+    assert store2.version_of(0) == 1
+    loaded = store2.get(0)
+    np.testing.assert_array_equal(
+        np.asarray(loaded["q_proj"]["u"]), np.asarray(v1["q_proj"]["u"]))
+
+
+def test_put_crash_after_rename_adopted_on_restart(tmp_path):
+    plan = FaultPlan(crash_at={"put-commit": 0})
+    store = AdapterStore(str(tmp_path / "adapters"), faults=plan)
+    reg = AdapterRegistry(TINY_PARAMS, TINY_PEFT, 2, n_tenants=4, rng=RNG,
+                          store=store)
+    tree = scaled_tree(reg, 0)
+    with pytest.raises(SimulatedCrash):
+        reg.put(0, tree)                   # published, host insert lost
+    assert plan.fired.get("crash:put-commit") == 1
+    # "restart": a fresh registry's load-on-miss ADOPTS the newer
+    # on-disk version instead of re-materializing the synthetic tree
+    store2 = AdapterStore(str(tmp_path / "adapters"))
+    assert store2.sweep_orphans() == 0     # the rename happened
+    reg2 = AdapterRegistry(TINY_PARAMS, TINY_PEFT, 2, n_tenants=4, rng=RNG,
+                           store=store2)
+    adopted = reg2.adapters_for(0)
+    np.testing.assert_array_equal(
+        np.asarray(adopted["q_proj"]["u"]), np.asarray(tree["q_proj"]["u"]))
+
+
+def test_corrupt_durable_copy_lands_in_typed_quarantine(tmp_path):
+    store = AdapterStore(str(tmp_path / "adapters"))
+    reg = AdapterRegistry(TINY_PARAMS, TINY_PEFT, 2, n_tenants=4, rng=RNG,
+                          store=store)
+    reg.put(0, jax.tree_util.tree_map(np.asarray, reg.adapters_for(0)))
+    path = os.path.join(store.root, "tenant_0.npz")
+    blob = bytearray(open(path, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+    reg2 = AdapterRegistry(TINY_PARAMS, TINY_PEFT, 2, n_tenants=4, rng=RNG,
+                           store=AdapterStore(str(tmp_path / "adapters")))
+    with pytest.raises(QuarantineError, match="durable adapters failed"):
+        reg2.acquire(0)
+    # typed-quarantine path, not a crash: flagged, dropped from disk,
+    # registry maps untouched
+    assert reg2.is_quarantined(0)
+    assert not os.path.exists(path)
+    assert reg2.resident() == {} and reg2.n_free == 2
+
+
+# ---------------------------------------------------------------------------
+# kill-anywhere: crash at every durability boundary → warm restart
+# ---------------------------------------------------------------------------
+
+BOUNDARIES = [
+    ("step-early", {"step": 2}, {}),
+    ("step-late", {"step": 6}, {}),
+    ("merge", {"merge": 0},
+     dict(merged_capacity=1, promote_after=2, window=8)),
+    ("journal-flush", {"journal-flush": 2}, {}),
+    ("put", {"put": 1}, dict(puts=True)),
+    ("put-commit", {"put-commit": 1}, dict(puts=True)),
+]
+
+
+def crash_then_recover(tmp_path, crash_at, *, puts=False, wl_kwargs=None,
+                       **reg_kw):
+    """The kill-anywhere harness: journaled run until the scheduled
+    crash, then a fresh-process recovery over the same disk.  Returns
+    everything the property assertions need."""
+    plan = FaultPlan(crash_at=dict(crash_at))
+    wl_kwargs = dict(n=10, tenants=4,
+                     **(wl_kwargs or {}))
+    wl = workload(**wl_kwargs)
+    store, journal, reg, eng = build(tmp_path, plan, **reg_kw)
+    eng.warmup()
+    sched = Scheduler(eng)
+    crashed = False
+    try:
+        if puts:
+            reg.put(0, scaled_tree(reg, 0))
+            reg.put(1, scaled_tree(reg, 1))
+        sched.run(copy.deepcopy(wl), clock=INF)
+    except SimulatedCrash:
+        crashed = True
+    assert crashed, f"scheduled crash {crash_at} never fired"
+    assert sum(v for k, v in plan.fired.items()
+               if k.startswith("crash:")) == 1
+
+    # -- "restart": fresh store/journal/registry/engine, same disk ----
+    store2, journal2, reg2, eng2 = build(tmp_path, None, **reg_kw)
+    report = recover(journal2, reg2, eng2)
+    snap = eng2.warmup()
+    sched2 = Scheduler(eng2)
+    remainder = [r for r in workload(**wl_kwargs)
+                 if r.rid not in report.journaled_rids()]
+    done2 = sched2.run(remainder, clock=INF, resume=report.resume)
+    eng2.assert_no_retrace(snap)
+    return wl, report, done2, sched2, reg2, plan
+
+
+@pytest.mark.parametrize("name,crash_at,kw",
+                         BOUNDARIES, ids=[b[0] for b in BOUNDARIES])
+def test_kill_anywhere_recovery_completes_with_full_accounting(
+        tmp_path, name, crash_at, kw):
+    kw = dict(kw)
+    puts = kw.pop("puts", False)
+    wl, report, done2, sched2, reg2, plan = crash_then_recover(
+        tmp_path, crash_at, puts=puts, **kw)
+    buckets = assert_one_bucket(wl, report, done2, sched2)
+    # the restarted replay must actually finish the trace healthily
+    assert len(buckets["completed"]) + len(buckets["recovered"]) \
+        + len(buckets["pre_completed"]) == len(wl)
+    # every recovered stream matches the recovery-schedule-faithful
+    # oracle (extended prefill at each resume point, exact tier replay)
+    for r in done2:
+        if r.recovered and r.resume_points:
+            assert r.resume_points[-1] <= len(r.tokens)
+            assert r.tokens == oracle_tokens(CFG, PEFT, PARAMS, reg2, r), \
+                f"recovered rid {r.rid} diverged from the oracle"
+    # and plain post-restart completions still match the tier oracle
+    for r in done2[:2]:
+        assert r.tokens == oracle_tokens(CFG, PEFT, PARAMS, reg2, r)
+
+
+def test_recovery_resumes_inflight_and_reports_rto(tmp_path):
+    wl, report, done2, sched2, reg2, plan = crash_then_recover(
+        tmp_path, {"step": 3})
+    # a step-boundary crash with 2 slots saturated leaves in-flight work
+    assert report.resume, "no in-flight requests at the crash"
+    resumed = [r for r in done2 if r.recovered]
+    assert resumed and all(r.resume_points for r in resumed
+                           if len(r.tokens) > len(r.resume_points))
+    assert sched2.recovered == resumed
+    s = summarize(done2, scheduler=sched2)
+    assert s["recovered"] == len(resumed)
+    assert s.get("restart_rto_s", 0) > 0
+    # resumed tokens extend the journaled prefix: prompt+prefix prefill
+    # then greedy decode — verified against the oracle above; here
+    # check the bookkeeping shape
+    for r in resumed:
+        assert r.resumed_s is not None
+        assert len(r.tokens) == r.max_new_tokens
+
+
+def test_double_crash_recovers_over_accumulated_journal(tmp_path):
+    # first life: crash at step 5 — leaves gen-4 requests mid-decode,
+    # so their resume emits a token and they are STILL in-flight at the
+    # second life's crash (fsync_every=1: every record durable, so the
+    # second life's resume records survive its own crash)
+    plan1 = FaultPlan(crash_at={"step": 5})
+    wl_kwargs = dict(n=10, tenants=4)
+    store, journal, reg, eng = build(tmp_path, plan1, fsync_every=1)
+    eng.warmup()
+    with pytest.raises(SimulatedCrash):
+        Scheduler(eng).run(workload(**wl_kwargs), clock=INF)
+    # second life: recovers, then crashes AGAIN on its very first step —
+    # after the resume prefills, before any decode
+    plan2 = FaultPlan(crash_at={"step": 0})
+    store2, journal2, reg2, eng2 = build(tmp_path, plan2, fsync_every=1)
+    report2 = recover(journal2, reg2, eng2)
+    assert report2.resume
+    eng2.warmup()
+    with pytest.raises(SimulatedCrash):
+        Scheduler(eng2).run(
+            [r for r in workload(**wl_kwargs)
+             if r.rid not in report2.journaled_rids()],
+            clock=INF, resume=report2.resume)
+    # third life: clean recovery over the full two-crash journal
+    store3, journal3, reg3, eng3 = build(tmp_path, None)
+    report3 = recover(journal3, reg3, eng3)
+    snap = eng3.warmup()
+    sched3 = Scheduler(eng3)
+    done3 = sched3.run(
+        [r for r in workload(**wl_kwargs)
+         if r.rid not in report3.journaled_rids()],
+        clock=INF, resume=report3.resume)
+    eng3.assert_no_retrace(snap)
+    wl = workload(**wl_kwargs)
+    assert_one_bucket(wl, report3, done3, sched3)
+    twice = [r for r in done3 if len(r.resume_points) >= 2]
+    assert twice, "no request survived both crashes with two resumes"
+    for r in done3:
+        if r.recovered:
+            assert r.tokens == oracle_tokens(CFG, PEFT, PARAMS, reg3, r)
+
+
+def test_restore_membership_rebuilds_tiers_and_quarantine(tmp_path):
+    # run traffic that onboards several tenants and promotes a hot one,
+    # then crash and check the rebuilt membership mirrors the journal
+    plan = FaultPlan(crash_at={"step": 8})
+    store, journal, reg, eng = build(tmp_path, plan, merged_capacity=1,
+                                     promote_after=2, window=8)
+    eng.warmup()
+    hot_wl = workload(n=12, tenants=3, seed=3)
+    crashed = False
+    try:
+        Scheduler(eng).run(copy.deepcopy(hot_wl), clock=INF)
+    except SimulatedCrash:
+        crashed = True
+    assert crashed
+    resident_before = dict(reg.resident())
+    merged_before = dict(reg.merged_resident())
+    store2, journal2, reg2, eng2 = build(tmp_path, None, merged_capacity=1,
+                                         promote_after=2, window=8)
+    report = recover(journal2, reg2, eng2)
+    assert set(reg2.resident()) == set(resident_before)
+    assert set(reg2.merged_resident()) == set(merged_before)
+    assert report.membership["resident"] == len(resident_before)
+    assert report.membership["merged"] == len(merged_before)

@@ -426,7 +426,7 @@ def test_failure_accounting_split_by_cause():
     assert [r.rid for r in sched.dropped] == [1, 2, 3]   # back-compat union
     assert sched.accounting() == dict(
         dropped_admission=1, shed_deadline=1, failed_quarantine=1,
-        failed_inflight=0, watchdog_cancels=0)
+        failed_inflight=0, recovered=0, watchdog_cancels=0)
     s = summarize(done, scheduler=sched)
     assert s["n_dropped"] == 3 and s["slo_ttft_attained"] == 0.0
 

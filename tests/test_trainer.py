@@ -104,3 +104,38 @@ def test_straggler_timer_counts():
         time.sleep(0.001 if i != 6 else 0.05)
         t.stop(i)
     assert 6 in hits
+
+
+def test_sigterm_preemption_resumes_at_exact_step(tmp_path):
+    """Preemption chaos: a real SIGTERM mid-run checkpoints
+    synchronously and exits cleanly; a restarted trainer (auto-restore)
+    resumes at the exact preemption step with bitwise-equal state."""
+    import signal
+
+    import numpy as np
+
+    tr1, stream1 = _setup(tmp_path / "run")
+
+    def preempt_at_13(step, metrics):
+        if step == 13:
+            os.kill(os.getpid(), signal.SIGTERM)
+
+    tr1.metrics_hook = preempt_at_13
+    try:
+        tr1.fit(stream1, steps=30)        # returns early, no exception
+        assert tr1.step == 13, f"preempted at {tr1.step}, wanted 13"
+
+        tr2, stream2 = _setup(tmp_path / "run")
+        assert tr2.step == 13, "auto-restore missed the preemption save"
+        assert tr2.data_state.step == 13, "data cursor out of sync"
+        for a, b in zip(
+                jax.tree_util.tree_leaves(jax.device_get(tr1.state)),
+                jax.tree_util.tree_leaves(jax.device_get(tr2.state))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        # and the resumed run still completes
+        tr2.metrics_hook = None
+        tr2.fit(stream2, steps=20)
+        assert tr2.step == 20
+    finally:
+        signal.signal(signal.SIGTERM, signal.SIG_DFL)
