@@ -72,6 +72,21 @@ pallas), five row kinds over the smoke serving model:
     prefills) and finishes it with exactly-one-bucket accounting and
     zero retraces; ``us_per_call`` is the measured restart RTO (engine
     start → first resumed token).
+``serve_trace_sharded`` (what=mesh<dp>x<tp>)
+    The scaling-efficiency grid (DESIGN.md §14): full churning replays
+    on dp×tp device meshes (tensor-sharded backbone + adapter bank over
+    ``model``, replica-parallel slot groups over ``data``), run in an
+    8-fake-device subprocess on the jnp backend; each row proves zero
+    retraces, churn, and oracle-equivalence, and payload ``derived``
+    carries per-mesh tok/s normalized to the 1x1 row
+    (``sharded_scaling_<dp>x<tp>``).  pallas rows replay a 1-device
+    mesh in-process (interpret-mode kernels under multi-device GSPMD
+    are unsupported).
+``serve_sharded_overhead`` (what=mesh1x1_vs_plain)
+    The fused step on a trivial 1x1-mesh engine vs the plain engine —
+    interleaved pairs like the guard gate; ``derived`` records the
+    low-quantile pair ratio (acceptance: ≤ 1.05 on jnp serving rows —
+    sharding machinery must be free until the mesh has >1 device).
 
 Honest labeling off-TPU mirrors kernels_suite: the pallas backend runs
 the interpret-mode emulator there, so pallas rows are timed at the tiny
@@ -94,7 +109,8 @@ ROW_OPS = ("serve_trace", "serve_decode_step", "serve_prefill_slot",
            "serve_trace_rglru", "serve_trace_hybrid",
            "serve_trace_tiered", "serve_trace_bank", "serve_hot_step",
            "serve_guard_overhead", "serve_trace_degraded",
-           "serve_journal_overhead", "serve_recovery")
+           "serve_journal_overhead", "serve_recovery",
+           "serve_trace_sharded", "serve_sharded_overhead")
 
 SERVE_SHAPES = {
     "serving": dict(slots=8, buckets=(16, 32), gen=16, capacity=16,
@@ -135,6 +151,18 @@ SERVE_SHAPES = {
                         merged_capacity=2, promote_after=2, window=8,
                         min_dwell=0, hot_permutation=3,
                         zipf=(0.0, 1.5), shift_hot_at=5),
+    # sharded grid (DESIGN.md §14): full replays on a dp×tp device mesh
+    # of fake CPU devices (8-device subprocess — jax locks the device
+    # count at backend init, so the mesh rows cannot run in the bench
+    # process).  Fake devices share the same physical cores, so the
+    # scaling-efficiency columns track the sharding machinery's
+    # overhead trend, not real speedup; slots must divide by dp.
+    "sharded": dict(slots=4, buckets=(8, 16), gen=8, capacity=8,
+                    universe=16, requests=16, rate=None, seed=0,
+                    meshes=((1, 1), (1, 2), (2, 2), (2, 4))),
+    "sharded_tiny": dict(slots=2, buckets=(8,), gen=4, capacity=2,
+                         universe=6, requests=6, rate=None, seed=0,
+                         meshes=((1, 1), (1, 2), (2, 2))),
 }
 
 _POLICY_KEYS = ("merged_capacity", "promote_after", "window", "min_dwell")
@@ -158,7 +186,7 @@ def _family_archs():
 
 
 def _build(backend: str, grid: dict, cfg=None, targets=None, faults=None,
-           store=None, journal=None):
+           store=None, journal=None, mesh=None):
     from repro.configs import get_config, peft_targets
     from repro.core.transforms import PEFTConfig
     from repro.models import init_model
@@ -181,7 +209,7 @@ def _build(backend: str, grid: dict, cfg=None, targets=None, faults=None,
                          slots=grid["slots"],
                          prompt_buckets=grid["buckets"],
                          max_new_tokens=grid["gen"], faults=faults,
-                         journal=journal)
+                         journal=journal, mesh=mesh)
     return cfg, peft, params, registry, engine
 
 
@@ -627,6 +655,130 @@ def _crash_safety_entries(backend: str, mode: str, grid: dict, cfg,
     return rows
 
 
+# child template for the sharded grid: jax locks the host device count
+# at first backend init, so the mesh replays run in an 8-fake-device
+# subprocess (repro.common.subproc).  The child only sees PYTHONPATH=src
+# — repro imports only, no ``benchmarks``.
+_SHARDED_CHILD = r'''
+import copy, json
+import jax
+from repro.configs import get_config, peft_targets
+from repro.core.transforms import PEFTConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_model
+from repro.serving import (AdapterRegistry, Scheduler, ServeEngine,
+                           oracle_tokens, summarize, synthetic_workload)
+
+GRID = __GRID__
+cfg = get_config("smollm-360m", "smoke")
+rng = jax.random.PRNGKey(0)
+params = init_model(rng, cfg)
+rows = []
+for dp, tp in GRID["meshes"]:
+    peft = PEFTConfig(method="ether", n_blocks=4,
+                      targets=peft_targets("smollm-360m"), backend="jnp")
+    registry = AdapterRegistry(params, peft, GRID["capacity"],
+                               n_tenants=GRID["universe"],
+                               rng=jax.random.fold_in(rng, 1))
+    engine = ServeEngine(cfg, params, registry, peft,
+                         slots=GRID["slots"],
+                         prompt_buckets=tuple(GRID["buckets"]),
+                         max_new_tokens=GRID["gen"],
+                         mesh=make_host_mesh(dp, tp))
+    snap = engine.warmup()
+    wl = synthetic_workload(GRID["requests"], GRID["universe"],
+                            vocab=cfg.vocab, rate_rps=None,
+                            prompt_lens=(4, GRID["buckets"][-1]),
+                            gen_lens=(2, GRID["gen"]), seed=GRID["seed"])
+    best, aff = None, 0
+    for _ in range(2):
+        sched = Scheduler(engine)
+        done = sched.run(copy.deepcopy(wl), clock=lambda: float("inf"))
+        assert len(done) == len(wl) and not sched.dropped, \
+            (dp, tp, len(done), len(sched.dropped))
+        s = summarize(done)
+        if best is None or s["throughput_tok_s"] > best["throughput_tok_s"]:
+            best = s
+            aff = sched.stats["replica_affinity_admissions"]
+    engine.assert_no_retrace(snap)
+    assert registry.stats["evictions"] > 0, (dp, tp, "no churn")
+    # the scaling row stays honest: the sharded engine must still be
+    # token-identical to the single-tenant tier-faithful oracle
+    for req in done[:2]:
+        assert req.tokens == oracle_tokens(cfg, peft, params, registry,
+                                           req), (dp, tp, req.rid)
+    rows.append(dict(
+        mesh=[dp, tp], replicas=engine.n_replicas,
+        tok_s=round(best["throughput_tok_s"], 2),
+        p50_ms=round(best["p50_ms_per_token"], 3),
+        p95_ms=round(best["p95_ms_per_token"], 3),
+        ttft_p50_ms=round(best["ttft_p50_ms"], 2),
+        ttft_p95_ms=round(best["ttft_p95_ms"], 2),
+        n_requests=best["n_requests"],
+        evictions=registry.stats["evictions"], affinity=aff))
+print("SHARDED_JSON=" + json.dumps(rows))
+'''
+
+
+def _sharded_entries(backend: str, mode: str, grid_name: str, cfg,
+                     derived: dict) -> list[dict]:
+    """Mesh-sharded replay grid (DESIGN.md §14).
+
+    jnp rows replay the full trace on every dp×tp mesh of the grid in
+    one 8-fake-device subprocess (the bench process has already locked
+    jax to the host's real device count): each mesh row proves zero
+    retraces, real churn, and oracle-equivalence, and carries the usual
+    throughput/latency fields plus the replica count.  The derived
+    ``sharded_scaling_<dp>x<tp>`` columns normalize tok/s to the mesh
+    1x1 row — on fake CPU devices (shared cores) they track the
+    sharding machinery's overhead trend, not real speedup, which is
+    exactly the regression signal --compare needs.
+
+    pallas rows run ONE in-process mesh-1x1 replay at the tiny sharded
+    grid: interpret-mode kernels under multi-device GSPMD are not a
+    supported configuration, and a 1-device mesh already exercises the
+    sharded code path (NamedSharding params/banks, constrained states).
+    """
+    import json
+
+    sname = "sharded" if grid_name == "serving" else "sharded_tiny"
+    grid = dict(SERVE_SHAPES[sname])
+    if backend != "jnp":
+        from repro.launch.mesh import make_host_mesh
+        sgrid = dict(SERVE_SHAPES["sharded_tiny"])
+        sgrid.pop("meshes")
+        _, _, _, sreg, seng = _build(backend, sgrid,
+                                     mesh=make_host_mesh(1, 1))
+        return [_replay_entry("serve_trace_sharded", backend, mode,
+                              sgrid, cfg, sreg, seng, what="mesh1x1")]
+
+    from repro.common.subproc import run_subprocess
+    child = _SHARDED_CHILD.replace("__GRID__", repr(grid))
+    out = run_subprocess(child, devices=8, timeout=580)
+    payload = next(l for l in out.splitlines()
+                   if l.startswith("SHARDED_JSON="))
+    mesh_rows = json.loads(payload[len("SHARDED_JSON="):])
+    base = next(r["tok_s"] for r in mesh_rows if r["mesh"] == [1, 1])
+    entries = []
+    for r in mesh_rows:
+        dp, tp = r["mesh"]
+        entries.append(dict(
+            op="serve_trace_sharded", backend=backend, kind="decode",
+            what=f"mesh{dp}x{tp}", mode=mode,
+            shape=dict(batch=grid["slots"], tokens=1, d=cfg.d_model,
+                       dp=dp, tp=tp),
+            us_per_call=round(1e6 / max(r["tok_s"], 1e-9), 2),
+            tok_s=r["tok_s"], p50_ms=r["p50_ms"], p95_ms=r["p95_ms"],
+            ttft_p50_ms=r["ttft_p50_ms"],
+            ttft_p95_ms=r["ttft_p95_ms"],
+            n_requests=r["n_requests"], evictions=r["evictions"],
+            replicas=r["replicas"],
+            replica_affinity_admissions=r["affinity"]))
+        derived[f"sharded_scaling_{dp}x{tp}_{backend}"] = round(
+            r["tok_s"] / max(base, 1e-9), 3)
+    return entries
+
+
 def run_suite(shapes: str = "serving", include_interp: bool = False,
               iters: int | None = None) -> dict:
     """Time the serving rows per backend; returns the JSON payload.
@@ -691,6 +843,30 @@ def run_suite(shapes: str = "serving", include_interp: bool = False,
             shape=dict(batch=grid["slots"], tokens=1, d=d),
             us_per_call=round(us_gated, 2)))
         derived[f"guard_vs_ungated_{backend}"] = round(r_guard, 3)
+
+        # --- sharded-path tax: mesh-1x1 engine vs the plain engine ----
+        # same engine, same grid, but constructed over a trivial 1x1
+        # device mesh — everything the sharded path adds (NamedSharding
+        # placement, sharding constraints on the slot state, out-
+        # sharded bank swaps) with zero actual communication.  The
+        # acceptance gates the pair ratio at ≤ 1.05 on jnp serving
+        # rows: DESIGN.md §14's "sharding machinery is free when the
+        # mesh is trivial" claim, measured like the guard gate.
+        from repro.launch.mesh import make_host_mesh
+        _, _, _, sreg2, seng2 = _build(backend, grid,
+                                       mesh=make_host_mesh(1, 1))
+        seng2.warmup()
+        state_sh = _saturated_state(seng2, grid)
+        us_sh, _, r_sh = _paired_us(
+            lambda: seng2._step_fn(seng2.params, sreg2.bank, state_sh),
+            lambda: engine._step_fn(engine.params, registry.bank, state),
+            iters=4 * (iters or 10), pairs=9, q=0.25)
+        entries.append(dict(
+            op="serve_sharded_overhead", backend=backend, kind="decode",
+            what="mesh1x1_vs_plain", mode=mode,
+            shape=dict(batch=grid["slots"], tokens=1, d=d),
+            us_per_call=round(us_sh, 2)))
+        derived[f"sharded_vs_plain_{backend}"] = round(r_sh, 3)
 
         # --- prefill-into-slot admission ------------------------------
         b = grid["buckets"][-1]
@@ -782,6 +958,10 @@ def run_suite(shapes: str = "serving", include_interp: bool = False,
         entries += _crash_safety_entries(backend, mode, grid, cfg,
                                          derived)
 
+        # --- mesh-sharded scaling grid (subprocess, jnp) --------------
+        entries += _sharded_entries(backend, mode, grid_name, cfg,
+                                    derived)
+
         if shapes == "serving" and backend == "jnp":
             # acceptance contract (jnp rows, full grid only — the tiny
             # CI smoke gates on --compare instead, where the noise
@@ -813,6 +993,11 @@ def run_suite(shapes: str = "serving", include_interp: bool = False,
                 # near-free on the healthy path (batched fsync)
                 ("journal<=1.05x plain",
                  derived["journal_vs_plain_jnp"] <= 1.05),
+                # DESIGN.md §14: a trivial 1x1 mesh must not tax the
+                # fused step — the sharded path is pure bookkeeping
+                # until the mesh actually has >1 device
+                ("sharded<=1.05x plain",
+                 derived["sharded_vs_plain_jnp"] <= 1.05),
             ]
             failed = [name for name, ok in checks if not ok]
             if failed:

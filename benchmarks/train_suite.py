@@ -18,11 +18,13 @@ Three kinds of entries:
     The registered ``<op>_bwd`` dispatched standalone under a fixed
     cotangent — isolates the backward kernel from forward and loss.
 
-``train_step`` (shape key ``e2e``)
+``train_step`` (shape keys ``e2e_nb{4,8,16}``)
     A small end-to-end finetune step through ``runtime.trainer.Trainer``
-    (jit'd loss → grad → adamw update), per backend, reporting per-step
-    wall time and the fwd/bwd Pallas dispatch counters observed while
-    tracing — proof the kernel path is live inside the real trainer.
+    (jit'd loss → grad → adamw update), per backend, swept over the
+    ETHER reflection count ``n_blocks`` (the per-linear cost axis),
+    reporting per-step wall time and the fwd/bwd Pallas dispatch
+    counters observed while tracing — proof the kernel path is live
+    inside the real trainer.
 
 Honest labeling off-TPU mirrors kernels_suite: pallas rows run the
 interpret-mode emulator there, so each (op, pallas) pair is timed once
@@ -195,39 +197,49 @@ def _train_step_entries(shapes: str, include_interp: bool) -> list[dict]:
         # per adapted linear — keep that row at the tiny model so the
         # counters proof stays cheap; mode='interpret' labels it.
         small = tiny or (backend == "auto" and not on_tpu)
-        cfg = ModelConfig(name="train-bench", n_layers=2,
-                          d_model=128 if small else 256, n_heads=4,
-                          n_kv=2, d_ff=256 if small else 512, vocab=512,
-                          **SMOKE)
-        peft = PEFTConfig(method="ether", n_blocks=8,
-                          targets="q_proj|k_proj|v_proj|o_proj|gate_proj"
-                                  "|up_proj|down_proj", backend=backend)
-        stream = SyntheticLMStream(vocab=cfg.vocab, batch=2,
-                                   seq_len=16 if small else 32, seed=0)
-        execute.reset_counters()
-        tr = Trainer(cfg, peft, adamw(constant(1e-2)), seed=0)
-        import time
-        tr.fit(stream, steps=1)           # compile + warm the step fn
-        t0 = time.perf_counter()
-        tr.fit(stream, steps=1 + steps)
-        dt = (time.perf_counter() - t0) / steps
-        pal_fwd = sum(v for k, v in execute.counters("fwd").items()
-                      if k.endswith(".pallas"))
-        pal_bwd = sum(v for k, v in execute.counters("bwd").items()
-                      if k.endswith(".pallas"))
-        ref_ad = sum(v for k, v in execute.counters("bwd").items()
-                     if k.endswith(".jnp") or k.endswith("pallas_fallback"))
-        out.append(dict(
-            op="train_step", backend=backend, kind="e2e",
-            what="train_step",
-            mode=("xla" if backend == "jnp" else
-                  "compiled" if on_tpu else "interpret"),
-            shape=dict(batch=2, tokens=16 if small else 32,
-                       d=cfg.d_model),
-            us_per_call=round(dt * 1e6, 2),
-            pallas_fwd_traces=pal_fwd, pallas_bwd_traces=pal_bwd,
-            ref_ad_traces=ref_ad,
-        ))
+        # n_blocks axis: ETHER's per-linear cost is linear in the
+        # reflection count, so the e2e step rows sweep it — the jnp
+        # (XLA) rows carry the scaling signal; the interpret-mode auto
+        # row stays at the default depth (emulation timing is not a
+        # perf statement, only a liveness proof)
+        n_blocks_axis = (4, 8, 16) if backend == "jnp" else (8,)
+        for n_blocks in n_blocks_axis:
+            cfg = ModelConfig(name="train-bench", n_layers=2,
+                              d_model=128 if small else 256, n_heads=4,
+                              n_kv=2, d_ff=256 if small else 512,
+                              vocab=512, **SMOKE)
+            peft = PEFTConfig(method="ether", n_blocks=n_blocks,
+                              targets="q_proj|k_proj|v_proj|o_proj"
+                                      "|gate_proj|up_proj|down_proj",
+                              backend=backend)
+            stream = SyntheticLMStream(vocab=cfg.vocab, batch=2,
+                                       seq_len=16 if small else 32,
+                                       seed=0)
+            execute.reset_counters()
+            tr = Trainer(cfg, peft, adamw(constant(1e-2)), seed=0)
+            import time
+            tr.fit(stream, steps=1)       # compile + warm the step fn
+            t0 = time.perf_counter()
+            tr.fit(stream, steps=1 + steps)
+            dt = (time.perf_counter() - t0) / steps
+            pal_fwd = sum(v for k, v in execute.counters("fwd").items()
+                          if k.endswith(".pallas"))
+            pal_bwd = sum(v for k, v in execute.counters("bwd").items()
+                          if k.endswith(".pallas"))
+            ref_ad = sum(v for k, v in execute.counters("bwd").items()
+                         if k.endswith(".jnp")
+                         or k.endswith("pallas_fallback"))
+            out.append(dict(
+                op="train_step", backend=backend,
+                kind=f"e2e_nb{n_blocks}", what="train_step",
+                mode=("xla" if backend == "jnp" else
+                      "compiled" if on_tpu else "interpret"),
+                shape=dict(batch=2, tokens=16 if small else 32,
+                           d=cfg.d_model, n_blocks=n_blocks),
+                us_per_call=round(dt * 1e6, 2),
+                pallas_fwd_traces=pal_fwd, pallas_bwd_traces=pal_bwd,
+                ref_ad_traces=ref_ad,
+            ))
     return out
 
 

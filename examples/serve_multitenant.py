@@ -75,7 +75,22 @@ def main():
     ap.add_argument("--restore", action="store_true",
                     help="warm restart from --journal-dir: resume "
                          "in-flight requests, replay the rest")
+    ap.add_argument("--mesh", default="",
+                    help="dp,tp device mesh (e.g. 2,2): tensor-sharded "
+                         "backbone/bank over tp, replica-parallel slot "
+                         "groups over dp (DESIGN.md §14); pair with "
+                         "--fake-devices off-TPU")
+    ap.add_argument("--fake-devices", type=int, default=0,
+                    help="force N fake CPU host devices (set before the "
+                         "first backend touch)")
     args = ap.parse_args()
+
+    if args.fake_devices:
+        import os
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count="
+              f"{args.fake_devices}")
 
     cfg = get_config(args.arch, "smoke")
     rng = jax.random.PRNGKey(0)
@@ -118,10 +133,17 @@ def main():
     print(f"adapter bank: capacity {capacity} of {args.tenants} tenants "
           f"= {kb:.1f} KB HBM ({kb / capacity:.2f} KB/tenant)")
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+        dp, tp = (int(x) for x in args.mesh.split(","))
+        mesh = make_host_mesh(dp, tp)
+        print(f"mesh {dp}x{tp}: backbone/bank sharded over {tp}-way "
+              f"model axis, {dp} replica-parallel slot groups")
     engine = ServeEngine(cfg, params, registry, peft, slots=args.slots,
                          prompt_buckets=(bucket,),
                          max_new_tokens=args.gen, faults=faults,
-                         journal=journal)
+                         journal=journal, mesh=mesh)
     report = None
     if args.restore:
         # warm restart BEFORE warmup: membership rebuilt from the

@@ -269,6 +269,16 @@ class AdapterBank:
                    for _, a in _flatten_adapter_modules(self.tree)
                    for leaf in a.values())
 
+    def to_device(self, sharding) -> "AdapterBank":
+        """New bank with every leaf committed to ``sharding`` (e.g. a
+        mesh-replicated NamedSharding).  ETHER rows are O(d) per module,
+        so replicating the whole bank costs KBs per device and keeps the
+        batched gather-and-reflect collective-free; the registry commits
+        the bank once at mesh attach and pins the jitted swap's output
+        sharding, so tenant churn never changes the jit signature."""
+        return AdapterBank(jax.device_put(self.tree, sharding),
+                           self.tenants, self.stack_ndims)
+
 
 def _bank_flatten(bank: AdapterBank):
     aux = (bank.tenants, tuple(sorted(bank.stack_ndims.items())))

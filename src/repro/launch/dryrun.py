@@ -14,7 +14,10 @@ EXPERIMENTS.md §Roofline table.
 # The VERY FIRST lines, before ANY other import (jax locks device count
 # on first init):
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))
+from repro.common.subproc import set_host_device_count
+set_host_device_count(512)
 
 import argparse      # noqa: E402
 import json          # noqa: E402

@@ -181,6 +181,18 @@ def run_trace(args, cfg, peft, params, rng):
     elif args.restore:
         raise SystemExit("--restore requires --journal-dir (the journal "
                          "and durable store of the dead process)")
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+        try:
+            dp, tp = (int(x) for x in args.mesh.split(","))
+        except ValueError:
+            raise SystemExit(f"--mesh wants dp,tp (got {args.mesh!r})")
+        if dp * tp > len(jax.devices()):
+            raise SystemExit(f"--mesh {dp}x{tp} needs {dp * tp} devices, "
+                             f"have {len(jax.devices())} (use "
+                             f"--fake-devices off-TPU)")
+        mesh = make_host_mesh(dp, tp)
     registry = AdapterRegistry(params, peft, capacity, n_tenants=distinct,
                                rng=jax.random.fold_in(rng, 1),
                                merged_capacity=args.merged_capacity,
@@ -188,7 +200,7 @@ def run_trace(args, cfg, peft, params, rng):
     engine = ServeEngine(cfg, params, registry, peft, slots=args.slots,
                          prompt_buckets=buckets,
                          max_new_tokens=args.gen, faults=faults,
-                         journal=journal)
+                         journal=journal, mesh=mesh)
     report = None
     if args.restore:
         # warm restart (DESIGN.md §13): rebuild membership + re-admit
@@ -204,10 +216,14 @@ def run_trace(args, cfg, peft, params, rng):
     kb = registry.bank.size_bytes() / 1e3
     tier = (f", merged tier {args.merged_capacity} tenants"
             if args.merged_capacity else "")
+    grid = (f", mesh {mesh.shape['data']}x{mesh.shape['model']} "
+            f"({engine.n_replicas} slot replicas x "
+            f"{engine.slots // engine.n_replicas} slots)"
+            if mesh is not None else "")
     print(f"serve engine [{args.method}/{args.backend}]: {args.slots} "
           f"slots, bank capacity {capacity} tenants = {kb:.1f} KB HBM"
           f"{tier}, universe {distinct} tenants, buckets {buckets}, "
-          f"max_len {engine.max_len}")
+          f"max_len {engine.max_len}{grid}")
 
     t0 = time.perf_counter()
     snap = engine.warmup()
@@ -308,6 +324,11 @@ def run_trace(args, cfg, peft, params, rng):
     print(f"registry churn: {r['hits']} hits, {r['misses']} onboards "
           f"({r['evictions']} evictions), "
           f"{r['swap_s'] / max(r['swaps'], 1) * 1e3:.2f} ms/swap")
+    if engine.n_replicas > 1:
+        print(f"replica placement: {engine.n_replicas} slot groups, "
+              f"{sched.stats['replica_affinity_admissions']} "
+              f"affinity-routed admissions (adapter rows already in the "
+              f"replica's bank region)")
     if registry.merged_capacity:
         t = engine.tier_stats
         total = t["merged_tokens"] + t["bank_tokens"]
@@ -390,6 +411,16 @@ def main():
     ap.add_argument("--fsync-every", type=int, default=32,
                     help="journal batched-fsync granularity (records per "
                          "fsync; 1 = every record durable)")
+    ap.add_argument("--mesh", default="",
+                    help="dp,tp device mesh for the sharded serve engine "
+                         "(e.g. 2,2): backbone + adapter bank tensor-"
+                         "sharded over tp, decode slots replicated into "
+                         "dp parallel groups (DESIGN.md §14); pair with "
+                         "--fake-devices to run off-TPU")
+    ap.add_argument("--fake-devices", type=int, default=0,
+                    help="force N fake CPU host devices before the first "
+                         "backend touch (mesh smoke without real "
+                         "accelerators)")
     ap.add_argument("--chaos-seed", type=int, default=None,
                     help="seed a FaultPlan over every fault class "
                          "(corrupt/kernel/merge/straggler/evict_storm) "
@@ -397,6 +428,15 @@ def main():
                          "report adds failure accounting and typed "
                          "outcome counts (DESIGN.md §12)")
     args = ap.parse_args()
+
+    if args.fake_devices:
+        # must land before the first backend touch — jax import is fine
+        # (backends initialise lazily), jax.devices() is not
+        import os
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count="
+              f"{args.fake_devices}")
 
     import jax
     import jax.numpy as jnp

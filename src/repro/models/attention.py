@@ -174,6 +174,13 @@ def apply_attention(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
                 cache["k"].dtype), write_pos, axis=2)
             cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
                 cache["v"].dtype), write_pos, axis=2)
+        # keep the post-scatter cache in the layout the serve engine
+        # committed it with (slots→data, kv-heads/T→model) — otherwise
+        # the per-token scatter would let GSPMD drift the layout and the
+        # next decode step's input signature (a retrace under a mesh)
+        from repro.parallel.context import shard_slot_cache
+        ck = shard_slot_cache(ck, "kv")
+        cv = shard_slot_cache(cv, "kv")
         qpos = positions[:, -1:]                     # (B, 1) absolute pos
         kpos = None
         if ring:

@@ -268,6 +268,13 @@ def _apply_layer(p: Params, x: jax.Array, btype: str, cfg: ModelConfig, *,
     x = x + mixed
     if not keep_cache:
         new_cache = {}
+    elif btype in ("ssd", "rglru") and new_cache:
+        # recurrent slot state keeps its committed layout through the
+        # fused single-step update (attention constrains its own k/v in
+        # apply_attention); no-op outside a mesh context
+        from repro.parallel.context import shard_slot_cache
+        new_cache = {k: shard_slot_cache(v, "h" if k == "h" else k)
+                     for k, v in new_cache.items()}
 
     aux = {"aux_loss": jnp.zeros((), jnp.float32),
            "router_z": jnp.zeros((), jnp.float32)}

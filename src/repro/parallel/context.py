@@ -120,6 +120,54 @@ def shard_heads(x: jax.Array, role: str = "q") -> jax.Array:
                                                              spec))
 
 
+_SLOT_CACHE_KINDS = {"k": "kv", "v": "kv", "ssm": "ssm", "conv": "conv",
+                     "h": "h"}
+
+
+def shard_slot_cache(x: jax.Array, kind: Optional[str]) -> jax.Array:
+    """Decode-path slot-cache constraint mirroring
+    :func:`repro.parallel.sharding.spec_for_cache`: the slot/batch dim
+    goes to the data axes (replica-parallel slot groups — decode is
+    independent along slots, so dp shards never exchange cache rows) and
+    one inner dim goes to ``model`` when divisible.  Applied to the
+    cache leaves the serve engine's jitted steps write, so the updated
+    cache leaves keep the layout the engine committed them with (a
+    layout drift here would change the jit input signature next step —
+    a retrace).  No-op without an active context or for unknown
+    ``kind``."""
+    ctx = get_context()
+    if ctx is None or kind not in _SLOT_CACHE_KINDS.values():
+        return x
+    m = ctx.model_size
+
+    def bspec(b):
+        return ctx.dp_axes if b % ctx.dp_size == 0 and b > 1 else None
+
+    if kind == "kv" and x.ndim == 4:                 # (B, kv, T, hd)
+        b, kv, t, hd = x.shape
+        if kv % m == 0:
+            spec = P(bspec(b), "model", None, None)
+        elif t % m == 0:
+            spec = P(bspec(b), None, "model", None)
+        elif hd % m == 0:
+            spec = P(bspec(b), None, None, "model")
+        else:
+            spec = P(bspec(b), None, None, None)
+    elif kind == "ssm" and x.ndim == 4:              # (B, H, N, P)
+        b, h = x.shape[0], x.shape[1]
+        spec = P(bspec(b), "model" if h % m == 0 else None, None, None)
+    elif kind == "conv" and x.ndim == 3:             # (B, W-1, C)
+        b, c = x.shape[0], x.shape[2]
+        spec = P(bspec(b), None, "model" if c % m == 0 else None)
+    elif kind == "h" and x.ndim == 2:                # (B, D)
+        b, d = x.shape
+        spec = P(bspec(b), "model" if d % m == 0 else None)
+    else:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh,
+                                                             spec))
+
+
 def attn_probs_dtype(default):
     ctx = get_context()
     if ctx is not None and ctx.attn_probs_bf16:

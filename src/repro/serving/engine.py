@@ -58,6 +58,7 @@ from repro.core.peft import validate_tenant_ids
 from repro.models import api
 from repro.models.backbone import ModelConfig
 from repro.models.encdec import EncDecConfig
+from repro.parallel.context import MeshContext, mesh_context
 from repro.serving.registry import AdapterRegistry
 from repro.serving.scheduler import (AdmissionError, Request, RequestError,
                                      SlotAllocator)
@@ -100,7 +101,8 @@ class ServeEngine:
                  registry: AdapterRegistry, peft, *, slots: int = 8,
                  prompt_buckets=DEFAULT_BUCKETS, max_new_tokens: int = 32,
                  max_len: Optional[int] = None, faults=None,
-                 step_retries: int = 1, journal=None):
+                 step_retries: int = 1, journal=None, mesh=None,
+                 replicas: Optional[int] = None):
         self.cfg, self.params, self.registry, self.peft = (cfg, params,
                                                            registry, peft)
         # write-ahead journal (DESIGN.md §13): admissions are journaled
@@ -136,11 +138,57 @@ class ServeEngine:
                 f"generated tokens")
         _check_servable(cfg, self.max_len)
 
-        self._alloc = SlotAllocator(self.slots)
+        # -- mesh placement (DESIGN.md §14) ----------------------------
+        # decode is S=1, so sequence sharding is meaningless here;
+        # head-sharded attention co-locates with the model-sharded
+        # weights, and the slot caches follow spec_for_cache
+        self.mesh = mesh
+        self._ctx = (MeshContext(mesh, seq_shard=False)
+                     if mesh is not None else None)
+        self._state_shardings = None
+        if self._ctx is not None:
+            from repro.parallel.sharding import param_specs, to_shardings
+            self.params = jax.device_put(
+                params,
+                to_shardings(param_specs(params, mesh, serve=True), mesh))
+            # the registry must swap/merge against the SAME sharded base
+            # tree: a merged tree mixing mesh-committed kernels with
+            # dev0-committed untargeted leaves is an "incompatible
+            # devices" error inside jit
+            self.registry.attach_mesh(mesh, self.params)
+        # -- replica-parallel slot groups (DESIGN.md §14) --------------
+        # decode slots are independent (no cross-slot math), so slot
+        # groups replicate over the data axes and each data shard runs
+        # its group's decode locally.  Placement is pure host
+        # bookkeeping, so `replicas` also works without a mesh
+        # (single-device placement tests).
+        n = int(replicas) if replicas is not None else (
+            self._ctx.dp_size if self._ctx is not None else 1)
+        if (self._ctx is not None and replicas is not None
+                and n != self._ctx.dp_size):
+            raise ValueError(
+                f"replicas={n} disagrees with the mesh's data extent "
+                f"{self._ctx.dp_size} — slot groups replicate over the "
+                f"data axes, one group per data shard")
+        if n < 1:
+            raise ValueError("need at least one replica")
+        if self.slots % n:
+            raise ValueError(f"slots {self.slots} not divisible by "
+                             f"{n} replicas")
+        self.n_replicas = n
+        self._spr = self.slots // n            # slots per replica group
+        self._allocs = [SlotAllocator(self._spr) for _ in range(n)]
+        if n > 1:
+            self.registry.configure_regions(n)
+
         self._requests: dict[int, Request] = {}
         self._traces: dict[str, int] = {}
         self._origin = time.perf_counter()
         self._state = self._fresh_state()
+        if self._ctx is not None:
+            self._state_shardings = self._state_shardings_for(self._state)
+            self._state = jax.device_put(self._state,
+                                         self._state_shardings)
         self._step_fn = self._jit("decode_step", self._step_impl)
         self._merged_step_fn = self._jit("decode_step_merged",
                                          self._merged_step_impl)
@@ -154,11 +202,22 @@ class ServeEngine:
 
     def _jit(self, name: str, fn):
         """jit with a cache-miss counter: the wrapped python body runs
-        only when jax (re)traces, so the count IS the compile count."""
+        only when jax (re)traces, so the count IS the compile count.
+        Under a mesh every call runs inside the engine's mesh context so
+        *tracing* sees the sharding policy (shard_heads /
+        shard_slot_cache activate); on cache-hit calls the context entry
+        is a cheap list push."""
         def counted(*args):
             self._traces[name] = self._traces.get(name, 0) + 1
             return fn(*args)
-        return jax.jit(counted)
+        jitted = jax.jit(counted)
+        if self._ctx is None:
+            return jitted
+
+        def meshed(*args):
+            with mesh_context(self._ctx):
+                return jitted(*args)
+        return meshed
 
     def jit_cache_misses(self, include_registry: bool = True
                          ) -> dict[str, int]:
@@ -187,13 +246,51 @@ class ServeEngine:
     def _fresh_state(self) -> Params:
         cache = api.init_cache(self.cfg, self.slots, self.max_len)
         cache["cursor"] = jnp.zeros((self.slots,), jnp.int32)
-        return dict(
+        state = dict(
             cache=cache,
             tok=jnp.zeros((self.slots, 1), jnp.int32),
             tenant=jnp.zeros((self.slots,), jnp.int32),
             active=jnp.zeros((self.slots,), bool),
             remaining=jnp.zeros((self.slots,), jnp.int32),
         )
+        if self._state_shardings is not None:
+            state = jax.device_put(state, self._state_shardings)
+        return state
+
+    def _state_shardings_for(self, state: Params):
+        """NamedSharding tree for the slot state: cache leaves follow
+        ``spec_for_cache`` (slots→data, one inner dim→model when
+        divisible), the per-slot bookkeeping vectors follow the slot
+        axis.  The jitted steps constrain their outputs to exactly this
+        tree and eager host mutations re-pin through it, so the state's
+        layout is a closed invariant — which is what keeps the jit
+        signatures stable (zero retraces) under admit/retire churn."""
+        from repro.parallel.sharding import (batch_specs, cache_specs,
+                                             spec_for_batch, to_shardings)
+        spec = {k: batch_specs(v, self.mesh)
+                for k, v in state.items() if k != "cache"}
+        cspec = cache_specs(state["cache"], self.mesh)
+        cspec["cursor"] = spec_for_batch(
+            "cursor", tuple(state["cache"]["cursor"].shape), self.mesh)
+        spec["cache"] = cspec
+        return to_shardings(spec, self.mesh)
+
+    def _constrain(self, state: Params) -> Params:
+        """Pin a jitted step's output state to the invariant layout
+        (no-op unmeshed)."""
+        if self._state_shardings is None:
+            return state
+        return jax.lax.with_sharding_constraint(state,
+                                                self._state_shardings)
+
+    def _pin(self, key: str, arr):
+        """Re-commit an eagerly-mutated state leaf (``.at[].set`` runs
+        OUTSIDE the jitted steps in the fail/cancel paths) to its
+        invariant sharding — a drifted leaf layout would be a new input
+        signature for the next step (a retrace)."""
+        if self._state_shardings is None:
+            return arr
+        return jax.device_put(arr, self._state_shardings[key])
 
     def _step_impl(self, params, bank, state):
         """One fused batched decode step over all slots (argmax sampling
@@ -202,7 +299,8 @@ class ServeEngine:
         logits, new_cache = api.decode_step(
             params, bank, cache, state["tok"], self.cfg, self.peft,
             tenant_ids=state["tenant"])
-        return self._advance(state, logits, new_cache)
+        new_state, nxt, bad = self._advance(state, logits, new_cache)
+        return self._constrain(new_state), nxt, bad
 
     def _merged_step_impl(self, merged_params, state):
         """Hot-tier decode step: every active slot belongs to ONE hot
@@ -217,7 +315,8 @@ class ServeEngine:
         logits, new_cache = api.decode_step(
             merged_params, None, cache, state["tok"], self.cfg, None,
             tenant_ids=None)
-        return self._advance(state, logits, new_cache)
+        new_state, nxt, bad = self._advance(state, logits, new_cache)
+        return self._constrain(new_state), nxt, bad
 
     def _advance(self, state, logits, new_cache):
         """Shared slot bookkeeping for both step tiers (traced).
@@ -290,34 +389,85 @@ class ServeEngine:
                                                           slot, _ax),
                     sub, cache1[key])
             remaining = state["remaining"].at[slot].set(max_new - 1)
-            return dict(
+            new_state = dict(
                 cache=new_cache,
                 tok=state["tok"].at[slot, 0].set(tok),
                 tenant=state["tenant"].at[slot].set(tslot),
                 active=state["active"].at[slot].set(max_new > 1),
                 remaining=remaining,
-            ), tok, bad
+            )
+            return self._constrain(new_state), tok, bad
         return impl
 
     # -- serving API --------------------------------------------------
 
     @property
     def n_free(self) -> int:
-        return self._alloc.n_free
+        return sum(a.n_free for a in self._allocs)
 
     @property
     def n_active(self) -> int:
         return len(self._requests)
 
+    # -- replica placement (DESIGN.md §14) ----------------------------
+
+    def _alloc_slot(self, replica: int) -> Optional[int]:
+        local = self._allocs[replica].alloc()
+        return None if local is None else replica * self._spr + local
+
+    def _free_slot(self, slot: int) -> None:
+        r, local = divmod(slot, self._spr)
+        self._allocs[r].free(local)
+
+    def _replica_of(self, slot: int) -> int:
+        return slot // self._spr
+
+    def free_by_replica(self) -> list[int]:
+        """Free decode slots per replica group (scheduler placement)."""
+        return [a.n_free for a in self._allocs]
+
+    def replicas_holding(self, tenant_id: int) -> tuple[int, ...]:
+        """Replicas whose bank region already holds the tenant's
+        adapter rows — admitting there costs zero swaps."""
+        return self.registry.regions_holding(tenant_id)
+
+    def can_admit_on(self, req: Request, replica: int) -> bool:
+        """:meth:`can_admit`, scoped to one replica group: a slot is
+        free in the group AND the tenant's rows are acquirable in the
+        replica's bank region."""
+        return (self._allocs[replica].n_free > 0
+                and self.registry.can_acquire(req.tenant_id,
+                                              region=replica))
+
+    def _pick_replica(self, req: Request) -> int:
+        """Self-placement when the scheduler did not choose: prefer a
+        replica whose region already holds the tenant's rows (no swap),
+        else any replica that can admit, else any with a free slot (so
+        ``acquire`` raises the same typed errors as the single-replica
+        path).  Least-loaded with lowest-id tie-break — deterministic
+        for a fixed request sequence."""
+        if self.n_replicas == 1:
+            return 0
+        free = self.free_by_replica()
+        ok = [r for r in range(self.n_replicas)
+              if free[r] > 0
+              and self.registry.can_acquire(req.tenant_id, region=r)]
+        holding = set(self.registry.regions_holding(req.tenant_id))
+        cands = ([r for r in ok if r in holding] or ok
+                 or [r for r in range(self.n_replicas) if free[r] > 0])
+        if not cands:
+            return 0            # nothing free anywhere: admit raises
+        return min(cands, key=lambda r: (-free[r], r))
+
     def can_admit(self, req: Request) -> bool:
         """True iff :meth:`admit` would succeed right now: a decode slot
         is free AND the tenant's bank slot is acquirable (resident, or
-        free/evictable).  With more decode slots than bank capacity,
-        distinct-tenant requests beyond capacity must wait — the
-        scheduler checks here and applies back-pressure instead of
-        letting ``registry.acquire`` raise mid-replay."""
-        return (self._alloc.n_free > 0
-                and self.registry.can_acquire(req.tenant_id))
+        free/evictable) on the same replica.  With more decode slots
+        than bank capacity, distinct-tenant requests beyond capacity
+        must wait — the scheduler checks here and applies back-pressure
+        instead of letting ``registry.acquire`` raise mid-replay."""
+        return any(self.can_admit_on(req, r)
+                   for r in range(self.n_replicas))
 
     def bucket_for(self, prompt_len: int) -> int:
         for b in self.prompt_buckets:
@@ -351,10 +501,13 @@ class ServeEngine:
                                          self._make_prefill(b))
         return b
 
-    def admit(self, req: Request) -> list[Request]:
+    def admit(self, req: Request,
+              replica: Optional[int] = None) -> list[Request]:
         """Prefill ``req`` into a free slot (acquiring its tenant's bank
         slot from the registry) and emit its first token.  Returns the
-        request in a list iff it finished immediately (1-token gen)."""
+        request in a list iff it finished immediately (1-token gen).
+        ``replica`` pins the slot group (scheduler placement); None
+        self-places via :meth:`_pick_replica`."""
         plen = int(len(req.prompt))
         if plen < 1:
             raise AdmissionError("empty prompt")
@@ -375,17 +528,20 @@ class ServeEngine:
         # bucket_for above, so a raise here is an engine bug, not a bad
         # request, and must NOT be shed as a drop.
         api.validate_true_lens(plen, bucket)
-        slot = self._alloc.alloc()
+        if replica is None:
+            replica = self._pick_replica(req)
+        slot = self._alloc_slot(replica)
         if slot is None:
             raise RuntimeError("no free decode slot (check n_free first)")
         try:
-            tslot = self.registry.acquire(req.tenant_id)   # validates id
+            tslot = self.registry.acquire(req.tenant_id,   # validates id
+                                          region=replica)
         except ValueError as e:
-            self._alloc.free(slot)                     # don't leak it
+            self._free_slot(slot)                      # don't leak it
             # bad tenant id in the request → droppable rejection
             raise AdmissionError(str(e)) from e
         except Exception:
-            self._alloc.free(slot)
+            self._free_slot(slot)
             raise
         # frontend guard on the *slot* indirection as well — a registry
         # bug must raise here, not clamp inside the bank gather
@@ -530,7 +686,8 @@ class ServeEngine:
         if error.kind == "nonfinite":
             self.fault_stats["nonfinite_slots"] += 1
             self.registry.mark_suspect(req.tenant_id)
-        self._state["active"] = self._state["active"].at[slot].set(False)
+        self._state["active"] = self._pin(
+            "active", self._state["active"].at[slot].set(False))
         return self._retire(slot)
 
     def _fail_batch(self, ordinal: int, err) -> list[Request]:
@@ -543,8 +700,10 @@ class ServeEngine:
         for slot, req in list(self._requests.items()):
             req.error = RequestError("kernel", str(err), step=ordinal)
             out.append(self._retire(slot))
-        self._state["active"] = jnp.zeros_like(self._state["active"])
-        self._state["remaining"] = jnp.zeros_like(self._state["remaining"])
+        self._state["active"] = self._pin(
+            "active", jnp.zeros_like(self._state["active"]))
+        self._state["remaining"] = self._pin(
+            "remaining", jnp.zeros_like(self._state["remaining"]))
         return out
 
     def inflight(self) -> dict[int, Request]:
@@ -560,7 +719,8 @@ class ServeEngine:
         self.fault_stats["cancels"] += 1
         req = self._requests[slot]
         req.error = error
-        self._state["active"] = self._state["active"].at[slot].set(False)
+        self._state["active"] = self._pin(
+            "active", self._state["active"].at[slot].set(False))
         return self._retire(slot)
 
     def preferred_tenant(self) -> Optional[int]:
@@ -582,8 +742,9 @@ class ServeEngine:
         device work — the slot's mask bit is already False and the next
         admission overwrites the row wholesale."""
         req = self._requests.pop(slot)
-        self._alloc.free(slot)
-        self.registry.release(req.tenant_id)
+        self._free_slot(slot)
+        self.registry.release(req.tenant_id,
+                              region=self._replica_of(slot))
         req.finish_s = self._now()
         end = {"t": "end", "rid": int(req.rid),
                "ok": 1 if req.error is None else 0}
@@ -617,15 +778,16 @@ class ServeEngine:
         remaining = int(req.max_new_tokens) - k
         bucket = self.bucket_for(plen)    # ensure_bucket ran pre-warmup
         api.validate_true_lens(plen, bucket)
-        slot = self._alloc.alloc()
+        replica = self._pick_replica(req)
+        slot = self._alloc_slot(replica)
         if slot is None:
             raise RuntimeError("no free decode slot for resume (at most "
                                "`slots` requests were in flight at the "
                                "crash, so this is a recovery bug)")
         try:
-            tslot = self.registry.acquire(req.tenant_id)
+            tslot = self.registry.acquire(req.tenant_id, region=replica)
         except Exception:
-            self._alloc.free(slot)
+            self._free_slot(slot)
             raise
         validate_tenant_ids([tslot], self.registry.capacity)
         self._jrec({"t": "resume", "rid": int(req.rid), "n": k})
@@ -674,10 +836,7 @@ class ServeEngine:
         state2, _, _ = self._merged_step_fn(self.params, state)
         jax.block_until_ready(state2["tok"])
         self.registry.warm_init()                      # warms init_fn
-        tree = self.registry.adapters_for(0)
-        discarded = self.registry._swap(self.registry.bank, tree,
-                                        jnp.int32(0))
-        jax.block_until_ready(jax.tree_util.tree_leaves(discarded.tree)[0])
+        self.registry.warm_swap()                      # warms _swap
         self.registry.warm_merge()                     # warms _merge
         self._state = self._fresh_state()
         return self.jit_cache_misses()

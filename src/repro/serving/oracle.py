@@ -27,6 +27,7 @@ from __future__ import annotations
 
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -79,7 +80,12 @@ def oracle_tokens(cfg, peft, params: Params, registry, req) -> list[int]:
         for tier in req.tiers[start + 1:end]:
             if tier == "merged":
                 if merged is None:
-                    merged = registry.merge_tree(req.tenant_id)
+                    # device_get: under a mesh-attached registry the
+                    # jitted merge pins its output to the mesh layout —
+                    # fetching to host lets this single-device oracle
+                    # replay it without mixing committed devices
+                    merged = jax.device_get(
+                        registry.merge_tree(req.tenant_id))
                 if st_m is None:
                     _, st_m = make_serving_fns(cfg, None, gen)
                 tok, cache = st_m(merged, None, cache, tok, None)

@@ -31,6 +31,20 @@ tiers).  Promotion runs the kernel-backed ``ether_merge`` /
 blocks on a merge: the hot tier only starts serving an entry once its
 device buffers report ready.  Hot tenants stay bank-resident too — the
 merged tier is a pure fast path, never the only copy.
+
+Replica regions (DESIGN.md §14): with :meth:`configure_regions` the
+bank's row range is partitioned into contiguous per-replica regions.  A
+tenant may hold copies in several regions (one row each); residency,
+pins, free lists and LRU order are tracked per region so one replica's
+churn never evicts rows another replica's in-flight requests depend on.
+Quarantine and eviction storms span all copies.  The default single
+region keeps every existing call site byte-identical in behavior.
+
+Mesh attach (DESIGN.md §14): :meth:`attach_mesh` commits the bank to a
+replicated layout on a device mesh and re-pins the jitted swap/merge
+output shardings — ETHER rows are O(d), so full bank replication costs
+KBs per device and keeps the batched gather-and-reflect collective-free
+while tenant churn never changes a jit signature.
 """
 
 from __future__ import annotations
@@ -99,11 +113,19 @@ class AdapterRegistry:
                                 seed.stack_ndims).with_capacity(capacity)
         self._store: dict[int, Params] = {}
         self._init_fn = init_fn or self._default_init(params, peft)
-        self._slot_of: dict[int, int] = {}
+        # -- regioned residency (DESIGN.md §14) ------------------------
+        # tid -> {region: slot}; per-region free lists / LRU; pins keyed
+        # (region, tid).  One region by default == the historical layout.
+        self._n_regions = 1
+        self._region_bounds: list[tuple[int, int]] = [(0, capacity)]
+        self._slots_of: dict[int, dict[int, int]] = {}
         self._tenant_of: dict[int, int] = {}
-        self._lru: OrderedDict[int, None] = OrderedDict()
-        self._free = list(range(capacity))
-        self._pins: dict[int, int] = {}
+        self._lru: list[OrderedDict[int, None]] = [OrderedDict()]
+        self._free: list[list[int]] = [list(range(capacity))]
+        self._pins: dict[tuple[int, int], int] = {}
+        # -- mesh placement (None until attach_mesh) -------------------
+        self._mesh = None
+        self._replicated = None
         # -- hot tier: merged-weight cache + frequency/LRU policy ------
         self.merged_capacity = merged_capacity
         self.promote_after = promote_after
@@ -143,13 +165,30 @@ class AdapterRegistry:
                           merge_failures=0, merge_retries=0,
                           storm_flushes=0)
 
+        self._build_jits()
+
+    def _build_jits(self) -> None:
+        """(Re)build the jitted row swap and merge.  Under a mesh the
+        output shardings are pinned explicitly — otherwise an eviction's
+        zero-scrub or a merge of a new tenant could let GSPMD drift the
+        bank/merged layout, and a drifted input sharding is a new jit
+        signature for every serving function downstream (a retrace)."""
+        swap_out = merge_out = None
+        if self._mesh is not None:
+            from repro.parallel.sharding import param_specs, to_shardings
+            swap_out = self._replicated
+            merge_out = to_shardings(
+                param_specs(self._params, self._mesh, serve=True),
+                self._mesh)
+
         def _swap_impl(bank, tree, slot):
             # traced body: runs only on a jit cache miss, so this count
             # is the compile count (see ServeEngine.jit_cache_misses)
             self.stats["swap_traces"] += 1
             return bank.replace_slot(slot, tree)
 
-        self._swap = jax.jit(_swap_impl)
+        self._swap = (jax.jit(_swap_impl) if swap_out is None else
+                      jax.jit(_swap_impl, out_shardings=swap_out))
 
         def _merge_impl(base, tree):
             # same trace-counting discipline as _swap: adapter trees
@@ -157,9 +196,86 @@ class AdapterRegistry:
             # first is a jit cache hit — the merge ops are charged once
             # per promotion, the compile once ever
             self.stats["merge_traces"] += 1
-            return merge_params(base, tree, peft)
+            return merge_params(base, tree, self._peft)
 
-        self._merge = jax.jit(_merge_impl)
+        self._merge = (jax.jit(_merge_impl) if merge_out is None else
+                       jax.jit(_merge_impl, out_shardings=merge_out))
+
+    # -- mesh placement (DESIGN.md §14) --------------------------------
+
+    def attach_mesh(self, mesh, params: Optional[Params] = None) -> None:
+        """Commit the bank to ``mesh`` (fully replicated) and pin the
+        jitted swap/merge output layouts.  ``params`` — when given — is
+        the engine's already-sharded base tree, which the merge path
+        must use so a merged tree never mixes mesh-committed kernels
+        with dev0-committed untargeted leaves (an "incompatible
+        devices" error inside jit).  Call before any residency exists
+        (typically right after engine construction, before warmup)."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        if self._slots_of or self._mslot_of:
+            raise RuntimeError("attach_mesh before any tenant is "
+                               "onboarded (bank rows would be resharded "
+                               "under in-flight requests)")
+        self._mesh = mesh
+        self._replicated = NamedSharding(mesh, PartitionSpec())
+        if params is not None:
+            self._params = params
+        self.bank = self.bank.to_device(self._replicated)
+        self._build_jits()
+
+    def _to_mesh(self, tree: Params) -> Params:
+        """Commit a host/dev0 adapter tree to the mesh (replicated) so a
+        jitted swap/merge never mixes committed devices; identity when
+        no mesh is attached."""
+        if self._replicated is None:
+            return tree
+        return jax.device_put(tree, self._replicated)
+
+    # -- replica regions (DESIGN.md §14) -------------------------------
+
+    def configure_regions(self, n: int) -> None:
+        """Partition the bank's row range into ``n`` contiguous regions
+        (one per engine replica).  Region sizes differ by at most one
+        row.  Must run before any tenant is onboarded — repartitioning
+        a live bank would strand rows under in-flight pins."""
+        n = int(n)
+        if n < 1:
+            raise ValueError("need at least one region")
+        if n > self.capacity:
+            raise ValueError(f"{n} regions need capacity >= {n} "
+                             f"(got {self.capacity})")
+        if self._slots_of or any(self._pins.values()):
+            raise RuntimeError("configure_regions before any tenant is "
+                               "onboarded")
+        base, rem = divmod(self.capacity, n)
+        bounds, start = [], 0
+        for r in range(n):
+            end = start + base + (1 if r < rem else 0)
+            bounds.append((start, end))
+            start = end
+        self._n_regions = n
+        self._region_bounds = bounds
+        self._free = [list(range(s, e)) for s, e in bounds]
+        self._lru = [OrderedDict() for _ in range(n)]
+        self._pins = {}
+
+    @property
+    def n_regions(self) -> int:
+        return self._n_regions
+
+    def regions_holding(self, tenant_id: int) -> tuple[int, ...]:
+        """Regions currently holding a copy of the tenant's adapters
+        (the scheduler's affinity signal for replica placement)."""
+        return tuple(sorted(self._slots_of.get(int(tenant_id), {})))
+
+    def _pinned(self, tid: int, region: Optional[int] = None) -> int:
+        """In-flight pin count for ``tid`` — in one region, or summed
+        over all copies (the tenant-wide guard quarantine and the
+        merged tier use: a tenant is only safe to drop when NO replica
+        is serving it)."""
+        if region is not None:
+            return self._pins.get((int(region), tid), 0)
+        return sum(c for (_, t), c in self._pins.items() if t == tid)
 
     def _default_init(self, params, peft):
         """Deterministic per-tenant synthetic adapters: one jitted init
@@ -213,8 +329,7 @@ class AdapterRegistry:
             self._quarantined.discard(tid)
             self._jlog("rehab", tid)
         self._merge_fenced.discard(tid)
-        slot = self._slot_of.get(tid)
-        if slot is not None:
+        for slot in self._slots_of.get(tid, {}).values():
             self._swap_in(slot, adapters)
 
     def _jlog(self, ev: str, tid: int) -> None:
@@ -328,30 +443,42 @@ class AdapterRegistry:
             else int(np.max(np.asarray(tenant_id))) + 1)
         validate_tenant_ids(tenant_id, bound)
 
-    def can_acquire(self, tenant_id: int) -> bool:
+    def can_acquire(self, tenant_id: int,
+                    region: Optional[int] = None) -> bool:
         """True iff :meth:`acquire` would succeed right now — the
-        tenant is resident, or a bank slot is free/evictable.  The
-        scheduler uses this as back-pressure: when every resident
-        tenant is pinned by in-flight requests, new distinct tenants
-        wait in the queue instead of crashing the replay."""
-        if int(tenant_id) in self._slot_of or self._free:
-            return True
-        return any(self._pins.get(t, 0) == 0 for t in self._lru)
+        tenant is resident, or a bank slot is free/evictable.  With
+        ``region`` the check is scoped to that replica's row range;
+        None asks "any region at all" (the scheduler uses this as
+        back-pressure: when every resident tenant is pinned by
+        in-flight requests, new distinct tenants wait in the queue
+        instead of crashing the replay)."""
+        tid = int(tenant_id)
+        copies = self._slots_of.get(tid, {})
+        regions = (range(self._n_regions) if region is None
+                   else (int(region),))
+        for r in regions:
+            if r in copies or self._free[r]:
+                return True
+            if any(self._pins.get((r, t), 0) == 0 for t in self._lru[r]):
+                return True
+        return False
 
-    def acquire(self, tenant_id: int) -> int:
-        """Pin ``tenant_id`` into the bank; returns its slot id.
+    def acquire(self, tenant_id: int, region: int = 0) -> int:
+        """Pin ``tenant_id`` into ``region``'s row range; returns its
+        slot id.
 
-        Cache hit: bump LRU recency.  Miss: take a free slot, else evict
-        the least-recently-used *unpinned* tenant; swap the tenant's
+        Cache hit (a copy already in that region): bump LRU recency.
+        Miss: take a free row there, else evict the region's
+        least-recently-used *unpinned* tenant; swap the tenant's
         adapters into that row (one jitted functional row update — leaf
         shapes never change, so nothing retraces)."""
         self.validate(tenant_id)
-        tid = int(tenant_id)
+        tid, r = int(tenant_id), int(region)
         if tid in self._quarantined:
             # backstop behind the scheduler's is_quarantined shed: a
             # poisoned adapter must never re-enter the batch
             raise QuarantineError(f"tenant {tid} is quarantined")
-        slot = self._slot_of.get(tid)
+        slot = self._slots_of.get(tid, {}).get(r)
         if slot is not None:
             self.stats["hits"] += 1
         else:
@@ -359,30 +486,32 @@ class AdapterRegistry:
             # materialize BEFORE taking a slot: a durable-load failure
             # (QuarantineError) must leave the slot maps untouched
             tree = self.adapters_for(tid)
-            slot = self._take_slot()
-            self._slot_of[tid] = slot
+            slot = self._take_slot(r)
+            first_copy = tid not in self._slots_of
+            self._slots_of.setdefault(tid, {})[r] = slot
             self._tenant_of[slot] = tid
             self._swap_in(slot, tree)
-            self._jlog("onboard", tid)
-        self._lru[tid] = None
-        self._lru.move_to_end(tid)
-        self._pins[tid] = self._pins.get(tid, 0) + 1
+            if first_copy:
+                self._jlog("onboard", tid)
+        self._lru[r][tid] = None
+        self._lru[r].move_to_end(tid)
+        self._pins[(r, tid)] = self._pins.get((r, tid), 0) + 1
         self._note_request(tid)
         return slot
 
-    def release(self, tenant_id: int) -> None:
+    def release(self, tenant_id: int, region: int = 0) -> None:
         """Unpin one in-flight request; the tenant stays resident (warm)
         until LRU eviction needs its slot.  A quarantined tenant's
         deferred eviction (pins are respected — sibling in-flight
         requests of the same tenant finish or are failed by their own
         detection, never yanked by an eviction) runs when the last pin
-        drops."""
-        tid = int(tenant_id)
-        n = self._pins.get(tid, 0)
+        across ALL regions drops."""
+        tid, r = int(tenant_id), int(region)
+        n = self._pins.get((r, tid), 0)
         if n <= 0:
             raise ValueError(f"tenant {tid} released but not acquired")
-        self._pins[tid] = n - 1
-        if n == 1 and tid in self._quarantined:
+        self._pins[(r, tid)] = n - 1
+        if (tid in self._quarantined and self._pinned(tid) == 0):
             self._evict_quarantined(tid)
 
     # -- quarantine & storms (DESIGN.md §12) ---------------------------
@@ -402,26 +531,26 @@ class AdapterRegistry:
         self._quarantined.add(tid)
         self.stats["quarantines"] += 1
         self._jlog("quarantine", tid)
-        if self._pins.get(tid, 0) == 0:
+        if self._pinned(tid) == 0:
             self._evict_quarantined(tid)
 
     def _evict_quarantined(self, tid: int) -> None:
-        """Remove a quarantined tenant from both tiers and scrub its
-        bank row to zeros.  Zeros — not mere freeing — because a zero
-        row is an identity adapter under any gather, while a NaN row is
-        the one kind of stale data masked arithmetic cannot neutralize
-        (``0 * NaN = NaN``).  The poisoned host copy is dropped too."""
+        """Remove a quarantined tenant from both tiers — every regional
+        copy — and scrub its bank rows to zeros.  Zeros — not mere
+        freeing — because a zero row is an identity adapter under any
+        gather, while a NaN row is the one kind of stale data masked
+        arithmetic cannot neutralize (``0 * NaN = NaN``).  The poisoned
+        host copy is dropped too."""
         if tid in self._mslot_of:
             self.demote(tid)
-        slot = self._slot_of.pop(tid, None)
-        if slot is not None:
+        for r, slot in self._slots_of.pop(tid, {}).items():
             del self._tenant_of[slot]
-            self._lru.pop(tid, None)
-            self._pins.pop(tid, None)
+            self._lru[r].pop(tid, None)
+            self._pins.pop((r, tid), None)
             zero = jax.tree_util.tree_map(jnp.zeros_like,
                                           self.bank.select(slot))
             self._swap_in(slot, zero)
-            self._free.append(slot)
+            self._free[r].append(slot)
         self._store.pop(tid, None)
         if self.store is not None:
             # the durable copy is the same poisoned tree — a restart
@@ -437,41 +566,48 @@ class AdapterRegistry:
         re-onboards the flushed tenants on demand through the ordinary
         swap/merge paths (no retraces: shapes never changed)."""
         n = 0
-        for tid in [t for t in self._mslot_of
-                    if self._pins.get(t, 0) == 0]:
+        for tid in [t for t in self._mslot_of if self._pinned(t) == 0]:
             self.demote(tid)
             n += 1
-        for tid in [t for t in self._lru
-                    if self._pins.get(t, 0) == 0]:
-            slot = self._slot_of.pop(tid)
-            del self._tenant_of[slot]
-            del self._lru[tid]
-            self._pins.pop(tid, None)
-            self._free.append(slot)
-            self.stats["evictions"] += 1
-            self._jlog("evict", tid)
-            n += 1
+        for r in range(self._n_regions):
+            for tid in [t for t in self._lru[r]
+                        if self._pins.get((r, t), 0) == 0]:
+                self._drop_copy(tid, r)
+                self.stats["evictions"] += 1
+                n += 1
         self.stats["storm_flushes"] += 1
         return n
 
-    def _take_slot(self) -> int:
-        if self._free:
-            return self._free.pop()
-        for tid in self._lru:                      # least recent first
-            if self._pins.get(tid, 0) == 0:
-                slot = self._slot_of.pop(tid)
-                del self._tenant_of[slot]
-                del self._lru[tid]
-                self._pins.pop(tid, None)
+    def _drop_copy(self, tid: int, r: int) -> None:
+        """Remove the tenant's copy in region ``r`` (row back to the
+        region's free list).  Journals ``evict`` only when the LAST
+        copy disappears — the journal records membership, not
+        placement, and replay rebuilds placement round-robin."""
+        slot = self._slots_of[tid].pop(r)
+        if not self._slots_of[tid]:
+            del self._slots_of[tid]
+            self._jlog("evict", tid)
+        del self._tenant_of[slot]
+        del self._lru[r][tid]
+        self._pins.pop((r, tid), None)
+        self._free[r].append(slot)
+
+    def _take_slot(self, region: int = 0) -> int:
+        r = int(region)
+        if self._free[r]:
+            return self._free[r].pop()
+        for tid in self._lru[r]:                   # least recent first
+            if self._pins.get((r, tid), 0) == 0:
+                self._drop_copy(tid, r)
                 self.stats["evictions"] += 1
-                self._jlog("evict", tid)
-                return slot
+                return self._free[r].pop()
         raise RuntimeError(f"all {self.capacity} resident tenants are "
                            f"pinned by in-flight requests")
 
     def _swap_in(self, slot: int, adapters: Params) -> None:
         t0 = time.perf_counter()
-        self.bank = self._swap(self.bank, adapters, jnp.int32(slot))
+        self.bank = self._swap(self.bank, self._to_mesh(adapters),
+                               jnp.int32(slot))
         jax.block_until_ready(jax.tree_util.tree_leaves(self.bank.tree)[0])
         self.stats["swaps"] += 1
         self.stats["swap_s"] += time.perf_counter() - t0
@@ -506,7 +642,7 @@ class AdapterRegistry:
             # threshold; pinned tenants (in-flight requests) never lose
             # their merged entry mid-request
             if (self._requests_seen - self._promoted_at[t] >= self.min_dwell
-                    and self._pins.get(t, 0) == 0):
+                    and self._pinned(t) == 0):
                 self.demote(t)
 
     def promote(self, tenant_id: int) -> bool:
@@ -579,7 +715,7 @@ class AdapterRegistry:
         """Free the least-recently-*served* unpinned merged entry; None
         when every merged tenant is pinned by in-flight requests."""
         for tid in self._mlru:                     # least recent first
-            if self._pins.get(tid, 0) == 0:
+            if self._pinned(tid) == 0:
                 mslot = self._mslot_of.pop(tid)
                 self.merged = self.merged.drop(mslot)
                 del self._mlru[tid]
@@ -621,7 +757,8 @@ class AdapterRegistry:
         """The tenant's fully-merged weight tree via the jitted
         kernel-backed merge (deterministic: the tier-faithful oracle
         recomputes the exact tree the engine served)."""
-        return self._merge(self._params, self.adapters_for(int(tenant_id)))
+        return self._merge(self._params,
+                           self._to_mesh(self.adapters_for(int(tenant_id))))
 
     def merged_for(self, tenant_id: int) -> Optional[Params]:
         """The tenant's merged tree iff it is hot AND its (async) merge
@@ -644,6 +781,15 @@ class AdapterRegistry:
 
     def is_merged(self, tenant_id: int) -> bool:
         return int(tenant_id) in self._mslot_of
+
+    def warm_swap(self) -> None:
+        """Compile the jitted row swap on tenant 0's tree (and throw
+        the result away) so the first real onboard after warmup is a
+        jit cache hit.  Routes through :meth:`_to_mesh` like every live
+        swap, so the compiled signature matches production exactly."""
+        tree = self.adapters_for(0)
+        discard = self._swap(self.bank, self._to_mesh(tree), jnp.int32(0))
+        jax.block_until_ready(jax.tree_util.tree_leaves(discard.tree)[0])
 
     def warm_merge(self) -> None:
         """Compile the jitted merge on a throwaway tree so the first
@@ -679,28 +825,35 @@ class AdapterRegistry:
                 self.stats["quarantines"] += 1
                 self._jlog("quarantine", tid)
             out["quarantined"] += 1
+        rr = 0
         for tid in resident:
             tid = int(tid)
-            if tid in self._quarantined or tid in self._slot_of:
+            if tid in self._quarantined or tid in self._slots_of:
                 out["skipped"] += 1
                 continue
-            if not self._free:
-                # capacity shrank across the restart: keep the most
-                # recent tenants (the list is LRU-ordered, so earlier
-                # entries are the right ones to lose)
+            # round-robin restored tenants over regions with free rows
+            # (the journal records membership, not placement); when no
+            # region has a free row, capacity shrank across the restart:
+            # keep the most recent tenants (the list is LRU-ordered, so
+            # earlier entries are the right ones to lose)
+            r = next((x % self._n_regions
+                      for x in range(rr, rr + self._n_regions)
+                      if self._free[x % self._n_regions]), None)
+            if r is None:
                 out["skipped"] += 1
                 continue
+            rr = r + 1
             try:
                 tree = self.adapters_for(tid)
             except QuarantineError:
                 out["corrupt"] += 1
                 continue
-            slot = self._take_slot()
-            self._slot_of[tid] = slot
+            slot = self._take_slot(r)
+            self._slots_of[tid] = {r: slot}
             self._tenant_of[slot] = tid
             self._swap_in(slot, tree)
-            self._lru[tid] = None
-            self._lru.move_to_end(tid)
+            self._lru[r][tid] = None
+            self._lru[r].move_to_end(tid)
             self._jlog("onboard", tid)
             out["resident"] += 1
         if self.merged_capacity:
@@ -736,12 +889,14 @@ class AdapterRegistry:
         return self.merged.size_bytes(self._params)
 
     def resident(self) -> dict[int, int]:
-        """tenant id → slot for every loaded tenant."""
-        return dict(self._slot_of)
+        """tenant id → slot for every loaded tenant (the lowest-slot
+        copy when a tenant is resident in several regions)."""
+        return {tid: min(copies.values())
+                for tid, copies in self._slots_of.items()}
 
     def slot_tenant(self, slot: int) -> Optional[int]:
         return self._tenant_of.get(slot)
 
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free)

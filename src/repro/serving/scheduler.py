@@ -271,7 +271,8 @@ class Scheduler:
 
     def __init__(self, engine, *, max_admits_per_tick: Optional[int] = None,
                  affinity_lookahead: Optional[int] = None,
-                 watchdog_s: Optional[float] = None):
+                 watchdog_s: Optional[float] = None,
+                 placement: str = "affinity"):
         self.engine = engine
         self.max_admits = max_admits_per_tick or engine.slots
         self.affinity_lookahead = (4 * engine.slots
@@ -280,13 +281,23 @@ class Scheduler:
         # stuck/runaway-slot guard: cancel any request in flight longer
         # than this many (real-clock) seconds.  None disables.
         self.watchdog_s = watchdog_s
+        # replica placement policy (DESIGN.md §14): "affinity" routes a
+        # tenant's requests to the replica whose bank region already
+        # holds its adapter rows; "round_robin" is the affinity-blind
+        # A/B baseline.  Irrelevant on single-replica engines.
+        if placement not in ("affinity", "round_robin"):
+            raise ValueError(f"placement must be 'affinity' or "
+                             f"'round_robin' (got {placement!r})")
+        self.placement = placement
+        self._rr = 0
         self.dropped_admission: list[Request] = []
         self.shed_deadline: list[Request] = []
         self.failed_quarantine: list[Request] = []
         self.failed: list[Request] = []
         self.recovered: list[Request] = []
         self.stats = dict(affinity_admissions=0,
-                          backpressure_admissions=0, watchdog_cancels=0)
+                          backpressure_admissions=0, watchdog_cancels=0,
+                          replica_affinity_admissions=0)
 
     @property
     def dropped(self) -> list[Request]:
@@ -335,7 +346,9 @@ class Scheduler:
         self.failed = []
         self.recovered = []
         self.stats = dict(affinity_admissions=0,
-                          backpressure_admissions=0, watchdog_cancels=0)
+                          backpressure_admissions=0, watchdog_cancels=0,
+                          replica_affinity_admissions=0)
+        self._rr = 0
         queue = FCFSQueue(requests)
         t0 = time.perf_counter()
         self.engine.start_clock(t0)    # request timestamps share origin
@@ -415,7 +428,9 @@ class Scheduler:
                         break
                     self.stats["backpressure_admissions"] += 1
                 try:
-                    collect(self.engine.admit(req))
+                    r = self._place(req)
+                    collect(self.engine.admit(req) if r is None
+                            else self.engine.admit(req, replica=r))
                 except AdmissionError:
                     # rejected at admission (engine.admit leaks neither
                     # slots nor registry pins on a raise); keep serving.
@@ -445,6 +460,35 @@ class Scheduler:
                 if wait > 0 and wait != float("inf"):
                     time.sleep(min(wait, 0.05))
         return done
+
+    def _place(self, req: Request) -> Optional[int]:
+        """Replica placement (DESIGN.md §14): pick the replica whose
+        bank region already holds the tenant's adapter rows (zero-swap
+        admission) among those that can admit right now, else the
+        least-loaded one (lowest id breaks ties — deterministic for a
+        fixed request sequence).  ``placement="round_robin"`` cycles
+        the admissible replicas instead (the affinity-blind baseline
+        the placement property tests A/B against).  Returns None —
+        plain ``admit`` — on single-replica engines or engines without
+        the replica surface (duck-typed: stub engines keep working)."""
+        n = getattr(self.engine, "n_replicas", 1)
+        if n <= 1:
+            return None
+        free = self.engine.free_by_replica()
+        ok = [r for r in range(n)
+              if free[r] > 0 and self.engine.can_admit_on(req, r)]
+        if not ok:
+            return None            # engine self-places (or raises)
+        if self.placement == "round_robin":
+            r = ok[self._rr % len(ok)]
+            self._rr += 1
+            return r
+        pref = [r for r in ok
+                if r in set(self.engine.replicas_holding(req.tenant_id))]
+        if pref:
+            self.stats["replica_affinity_admissions"] += 1
+        cands = pref or ok
+        return min(cands, key=lambda r: (-free[r], r))
 
     def _watchdog(self, tnow: float) -> None:
         """Cancel stuck/runaway slots: any in-flight request older than

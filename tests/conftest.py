@@ -1,11 +1,17 @@
 import os
-import subprocess
 import sys
 
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+# Shared fake-device subprocess helper (multi-device tests must not
+# pollute this process's jax device count — smoke tests see 1 device —
+# hence subprocesses; benches and CLI smokes use the same util).
+from repro.common.subproc import run_subprocess  # noqa: E402
 
 
 def pytest_configure(config):
@@ -13,24 +19,6 @@ def pytest_configure(config):
         "markers",
         "chaos: fault-injected serving degradation tests (DESIGN.md §12); "
         "run in isolation with `pytest -m chaos`")
-
-
-def run_subprocess(code: str, *, devices: int = 1, timeout: int = 300):
-    """Run a python snippet in a fresh process with N fake CPU devices.
-
-    Multi-device tests must not pollute this process's jax device count
-    (smoke tests see 1 device), hence subprocesses.
-    """
-    env = dict(os.environ)
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices}")
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=timeout)
-    if out.returncode != 0:
-        raise AssertionError(
-            f"subprocess failed:\nSTDOUT:\n{out.stdout}\n"
-            f"STDERR:\n{out.stderr}")
-    return out.stdout
 
 
 @pytest.fixture
